@@ -1,0 +1,46 @@
+"""Budget sweep: fused-response quality vs ε (the bi-objective trade-off the
+paper's §2.2 motivates — no table in the paper, but the frontier behind
+its '20% of blender cost' operating point)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EpsilonConstraint, ModiPolicy, realized_cost_fraction
+from repro.data import DEFAULT_POOL, TOKENIZER, generate_dataset, pool_responses, query_cost_matrix
+from benchmarks.table1 import fuse, get_stack, score_texts
+
+
+def run(n_test: int = 200, train_steps: int = 700,
+        fractions=(0.05, 0.1, 0.2, 0.35, 0.5, 0.75, 1.0), log=print):
+    _, scorer, scorer_p, fuser, fuser_p, predictor, pred_p = get_stack(train_steps, log=log)
+    test = generate_dataset(n_test, seed=54321)
+    responses = pool_responses(DEFAULT_POOL, test, seed=77)
+    costs = query_cost_matrix(DEFAULT_POOL, test)
+    toks = TOKENIZER.batch_encode([r.query for r in test], 64, cls=True)
+    r_hat = np.asarray(predictor.apply(pred_p, jnp.asarray(toks)))
+
+    rows = []
+    log(f"\nBudget sweep ({n_test} queries):")
+    log(f"{'eps':>6} {'members':>8} {'cost':>6} {'BARTScore':>10}")
+    for frac in fractions:
+        mask = np.asarray(ModiPolicy(EpsilonConstraint(float(frac))).select(
+            jnp.asarray(r_hat), jnp.asarray(costs)))
+        fused = fuse(fuser, fuser_p, test, responses, mask)
+        s = score_texts(scorer, scorer_p, test, fused).mean()
+        cf = float(np.asarray(realized_cost_fraction(jnp.asarray(mask), jnp.asarray(costs))).mean())
+        rows.append({"eps": frac, "members": float(mask.sum(1).mean()),
+                     "cost_frac": cf, "bartscore": float(s)})
+        log(f"{frac:>6.2f} {mask.sum(1).mean():>8.1f} {cf:>6.2f} {float(s):>10.3f}")
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/budget_sweep.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Knapsack micro-benchmark: paper Algorithm 1 (host Python) vs the batched
+lax DP vs the Pallas kernel (interpret mode on CPU — kernel-body semantics;
+TPU timing comes from the roofline, not this host clock)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.knapsack import knapsack_reference, knapsack_select
+from repro.kernels.knapsack import knapsack_select_pallas
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(log=print):
+    rng = np.random.default_rng(0)
+    rows = []
+    for q, n, budget in [(16, 8, 256), (64, 8, 256), (256, 8, 256), (64, 16, 256)]:
+        profits = jnp.asarray(rng.uniform(0.1, 5.0, (q, n)), jnp.float32)
+        costs_np = rng.integers(1, 128, (q, n))
+        costs = jnp.asarray(costs_np, jnp.int32)
+
+        def py_ref():
+            for qi in range(q):
+                knapsack_reference(
+                    [{"cost": int(costs_np[qi, i]), "target_score": float(profits[qi, i])}
+                     for i in range(n)], budget)
+            return jnp.zeros(())
+
+        t_py = _time(lambda: py_ref(), reps=1)
+        t_lax = _time(lambda: knapsack_select(profits, costs, budget))
+        t_pl = _time(lambda: knapsack_select_pallas(profits, costs, budget))
+        rows.append((f"knapsack_q{q}_n{n}", t_lax, f"python={t_py:.0f}us pallas_interp={t_pl:.0f}us"))
+        log(f"knapsack q={q} n={n} B={budget}: python={t_py:8.0f}us  "
+            f"lax={t_lax:8.0f}us  pallas(interp)={t_pl:8.0f}us")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

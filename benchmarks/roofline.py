@@ -1,0 +1,66 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs, mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL_FLOPs | HLO_FLOPs | useful | args GB/dev | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — | — | — |")
+            continue
+        ro = r["roofline"]
+        mem = r.get("memory", {})
+        useful = ro.get("useful_flops_ratio")
+        useful_s = f"{useful:.2f}" if useful else "—"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.4g} | {ro['memory_s']:.4g} "
+            f"| {ro['collective_s']:.4g} | {ro['dominant'].replace('_s', '')} "
+            f"| {ro['model_flops_global']:.3g} | {ro['hlo_flops_global']:.3g} "
+            f"| {useful_s} "
+            f"| {mem.get('argument_size_in_bytes', 0) / 1e9:.2f} "
+            f"| {mem.get('temp_size_in_bytes', 0) / 1e9:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def run(log=print):
+    recs = load()
+    if not recs:
+        log("no dry-run records found; run: python -m repro.launch.dryrun --all")
+        return []
+    for mesh in ("single", "multi"):
+        n = sum(1 for r in recs if r.get("mesh") == mesh)
+        if n:
+            log(f"\n=== roofline, {mesh}-pod ({n} records) ===")
+            log(fmt_table(recs, mesh))
+    rows = []
+    for r in recs:
+        if "roofline" in r:
+            ro = r["roofline"]
+            rows.append((f"dryrun_{r['arch']}_{r['shape']}_{r['mesh']}",
+                         ro["compute_s"] * 1e6,
+                         f"dominant={ro['dominant']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

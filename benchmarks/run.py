@@ -1,0 +1,59 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows.  Table 1 / budget-sweep train
+the paper stack on first run (cached in experiments/checkpoints/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller eval sets / training")
+    args = ap.parse_args()
+    steps = 300 if args.fast else 500
+    n1 = 120 if args.fast else 400
+    n2 = 60 if args.fast else 200
+
+    rows = []
+
+    from benchmarks import knapsack_bench
+
+    print("\n### knapsack microbenchmark (paper Algorithm 1)")
+    rows += knapsack_bench.run()
+
+    from benchmarks import table1
+
+    print("\n### Table 1 reproduction")
+    t1 = table1.run(n_test=n1, train_steps=steps)
+    rows.append(("table1_modi_bartscore", 0.0,
+                 f"modi={t1['MODI']['bartscore']:.3f}@{t1['MODI']['cost_frac']:.2f}x "
+                 f"blender={t1['LLM-BLENDER']['bartscore']:.3f}@1.0x"))
+
+    from benchmarks import budget_sweep
+
+    print("\n### budget sweep (bi-objective frontier)")
+    bs = budget_sweep.run(n_test=n2, train_steps=steps)
+    rows.append(("budget_sweep_points", 0.0,
+                 " ".join(f"{r['eps']:.2f}:{r['bartscore']:.2f}" for r in bs)))
+
+    from benchmarks import roofline
+
+    print("\n### roofline (from dry-run artifacts)")
+    rows += roofline.run()
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Table 1 reproduction: MixInstruct quality (BARTScore) per method.
+
+Methods (paper Table 1): each single pool member, Random ensemble,
+LLM-BLENDER (full pool + rank-top-k + GEN-FUSER), and MODI at 20% of the
+LLM-BLENDER cost.  Quality is BARTScore under the in-framework scorer
+(orderings are the reproduction target — DESIGN.md §3).
+
+Trained components are cached under experiments/checkpoints/ so reruns are
+cheap; delete that directory to retrain.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import (
+    EpsilonConstraint,
+    FixedSinglePolicy,
+    FullEnsemblePolicy,
+    ModiPolicy,
+    RandomPolicy,
+    bartscore,
+    realized_cost_fraction,
+)
+from repro.core.fusion import build_fusion_batch
+from repro.data import (
+    DEFAULT_POOL,
+    POOL_NAMES,
+    TOKENIZER,
+    generate_dataset,
+    pool_responses,
+    query_cost_matrix,
+)
+from repro.launch.serve import build_stack, quality_labels
+from repro.serve import greedy_generate_encdec
+from repro.train import checkpoint
+
+CKPT_DIR = "experiments/checkpoints"
+
+
+def get_stack(train_steps: int, log=print):
+    """Train-or-restore the scorer/fuser/predictor stack."""
+    paths = {n: os.path.join(CKPT_DIR, f"{n}.npz") for n in ("scorer", "fuser", "predictor")}
+    recs = generate_dataset(3000, seed=0)
+    from repro.models import build_model
+    from repro.core import build_predictor
+
+    scorer = build_model(configs.get("bartscore-scorer"))
+    fuser = build_model(configs.get("gen-fuser"))
+    predictor = build_predictor(num_models=len(DEFAULT_POOL))
+    if all(checkpoint.exists(p) for p in paths.values()):
+        log("[stack] restoring cached checkpoints")
+        scorer_p = checkpoint.restore(paths["scorer"], scorer.init(jax.random.key(1)))
+        fuser_p = checkpoint.restore(paths["fuser"], fuser.init(jax.random.key(2)))
+        pred_p = checkpoint.restore(paths["predictor"], predictor.init(jax.random.key(3)))
+    else:
+        _, scorer, scorer_p, fuser, fuser_p, predictor, pred_p = build_stack(train_steps, log=log)
+        os.makedirs(CKPT_DIR, exist_ok=True)
+        checkpoint.save(paths["scorer"], scorer_p)
+        checkpoint.save(paths["fuser"], fuser_p)
+        checkpoint.save(paths["predictor"], pred_p)
+    return recs, scorer, scorer_p, fuser, fuser_p, predictor, pred_p
+
+
+def score_texts(scorer, scorer_p, recs, texts):
+    """BARTScore [Q] of response texts against references."""
+    refs = TOKENIZER.pad_batch(
+        [TOKENIZER.encode(r.reference, bos=True, eos=True) for r in recs], 32
+    )
+    mask = (refs != TOKENIZER.pad_id).astype(np.float32)
+    # BARTScore conditions on the candidate only (see data.batching)
+    cands = TOKENIZER.pad_batch([TOKENIZER.encode(t) for t in texts], 64)
+    return np.asarray(
+        bartscore(scorer, scorer_p, jnp.asarray(cands), jnp.asarray(refs), jnp.asarray(mask))
+    )
+
+
+def fuse(fuser, fuser_p, recs, responses, mask):
+    """GEN-FUSER over the selected subset -> fused texts."""
+    q_tokens = TOKENIZER.batch_encode([r.query for r in recs], 64)
+    resp_tokens = np.full((len(recs), len(DEFAULT_POOL), 48), TOKENIZER.pad_id, np.int32)
+    for i in range(len(recs)):
+        for j in range(len(DEFAULT_POOL)):
+            if mask[i, j]:
+                enc = TOKENIZER.encode(responses[i][j])[:48]
+                resp_tokens[i, j, : len(enc)] = enc
+    fuse_in = build_fusion_batch(q_tokens, resp_tokens, mask, TOKENIZER.sep_id, 320)
+    out = greedy_generate_encdec(fuser, fuser_p, fuse_in, max_new=28)
+    return [TOKENIZER.decode(row) for row in out]
+
+
+def run(n_test: int = 400, train_steps: int = 700, budget: float = 0.2, log=print):
+    t0 = time.time()
+    _, scorer, scorer_p, fuser, fuser_p, predictor, pred_p = get_stack(train_steps, log=log)
+    test = generate_dataset(n_test, seed=12345)
+    responses = pool_responses(DEFAULT_POOL, test, seed=99)
+    costs = query_cost_matrix(DEFAULT_POOL, test)
+    full_cost = costs.sum(1)
+
+    # predicted quality from the query alone (MODI §2.3)
+    toks = TOKENIZER.batch_encode([r.query for r in test], 64, cls=True)
+    r_hat = np.asarray(predictor.apply(pred_p, jnp.asarray(toks)))
+
+    results = {}
+
+    # single members (Table 1 rows 1-8)
+    for j, name in enumerate(POOL_NAMES):
+        s = score_texts(scorer, scorer_p, test, [responses[i][j] for i in range(n_test)])
+        results[name] = {"bartscore": float(s.mean()), "cost_frac": float((costs[:, j] / full_cost).mean())}
+
+    # Random ensemble of 3 + fuse
+    rmask = np.asarray(RandomPolicy(k=3, seed=5).select(jnp.asarray(r_hat), jnp.asarray(costs)))
+    fused = fuse(fuser, fuser_p, test, responses, rmask)
+    s = score_texts(scorer, scorer_p, test, fused)
+    results["Random"] = {"bartscore": float(s.mean()),
+                         "cost_frac": float(np.asarray(realized_cost_fraction(jnp.asarray(rmask), jnp.asarray(costs))).mean())}
+
+    # LLM-BLENDER: all N invoked (cost O(N)), rank by quality, fuse top-3
+    top3 = np.argsort(-r_hat, axis=1)[:, :3]
+    bmask = np.zeros_like(rmask)
+    for i in range(n_test):
+        bmask[i, top3[i]] = True
+    fused = fuse(fuser, fuser_p, test, responses, bmask)
+    s = score_texts(scorer, scorer_p, test, fused)
+    results["LLM-BLENDER"] = {"bartscore": float(s.mean()), "cost_frac": 1.0}  # invokes all N
+
+    # MODI at `budget` x blender cost
+    mmask = np.asarray(ModiPolicy(EpsilonConstraint(budget)).select(jnp.asarray(r_hat), jnp.asarray(costs)))
+    fused = fuse(fuser, fuser_p, test, responses, mmask)
+    s = score_texts(scorer, scorer_p, test, fused)
+    results["MODI"] = {"bartscore": float(s.mean()),
+                       "cost_frac": float(np.asarray(realized_cost_fraction(jnp.asarray(mmask), jnp.asarray(costs))).mean())}
+
+    log(f"\nTable 1 reproduction ({n_test} test queries, {time.time()-t0:.0f}s):")
+    log(f"{'method':>18} {'BARTScore':>10} {'cost/blender':>13}")
+    for k, v in results.items():
+        log(f"{k:>18} {v['bartscore']:>10.3f} {v['cost_frac']:>13.2f}")
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/table1.json", "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    run()

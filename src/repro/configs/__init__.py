@@ -1,0 +1,59 @@
+"""Architecture config registry.
+
+Every assigned architecture has one module here exporting ``CONFIG``; the
+paper's own models (MODI quality predictor, GEN-FUSER, BARTScore scorer,
+ensemble pool members) are configs too.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ASSIGNED_ARCHS: List[str] = [
+    "qwen2.5-32b",
+    "internvl2-1b",
+    "zamba2-2.7b",
+    "minicpm3-4b",
+    "command-r-plus-104b",
+    "deepseek-v3-671b",
+    "mamba2-370m",
+    "smollm-360m",
+    "whisper-base",
+    "arctic-480b",
+]
+
+EXTRA_ARCHS: List[str] = [
+    "modi-predictor",
+    "gen-fuser",
+    "bartscore-scorer",
+]
+
+_MODULE_FOR: Dict[str, str] = {
+    "qwen2.5-32b": "qwen2_5_32b",
+    "internvl2-1b": "internvl2_1b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "minicpm3-4b": "minicpm3_4b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mamba2-370m": "mamba2_370m",
+    "smollm-360m": "smollm_360m",
+    "whisper-base": "whisper_base",
+    "arctic-480b": "arctic_480b",
+    "modi-predictor": "modi_predictor",
+    "gen-fuser": "gen_fuser",
+    "bartscore-scorer": "bartscore_scorer",
+}
+
+
+def get(arch: str) -> ModelConfig:
+    if arch not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULE_FOR)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[arch]}")
+    return mod.CONFIG
+
+
+def all_assigned() -> Dict[str, ModelConfig]:
+    return {a: get(a) for a in ASSIGNED_ARCHS}

@@ -1,0 +1,30 @@
+"""arctic-480b — dense-MoE hybrid: 128-expert top-2 MoE in parallel with a
+dense residual MLP every layer.
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864(per-expert) vocab=32000
+[hf:Snowflake/snowflake-arctic-base]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,  # dense residual branch hidden size
+    vocab_size=32000,
+    head_dim=128,
+    num_experts=128,
+    moe_top_k=2,
+    moe_d_ff=4864,
+    dense_residual=True,
+    capacity_factor=1.25,
+    rope_theta=10_000.0,
+    norm="rmsnorm",
+    act="silu",
+    dtype="bfloat16",
+    source="hf:Snowflake/snowflake-arctic-base",
+)

@@ -1,0 +1,29 @@
+"""BARTScore scorer — enc-dec LM whose conditional log-likelihood defines
+the quality metric (BARTScore = mean log p(reference | candidate)).
+
+The paper scores with BART-large; the metric's math is model-agnostic, so we
+train a small enc-dec scorer in-framework and report BARTScore under it
+(orderings, not absolute values, are the reproduction target — DESIGN.md §3).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="bartscore-scorer",
+    family="audio",  # enc-dec plumbing with text-token encoder input
+    num_layers=3,
+    d_model=192,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=768,
+    vocab_size=512,
+    head_dim=32,
+    is_encoder_decoder=True,
+    enc_layers=3,
+    enc_seq=512,
+    norm="layernorm",
+    act="gelu",
+    dtype="float32",
+    tie_embeddings=True,
+    source="Yang & Yang 2023 / Yuan et al. BARTScore definition",
+)

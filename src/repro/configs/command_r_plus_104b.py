@@ -1,0 +1,27 @@
+"""command-r-plus-104b — dense GQA, no-bias, parallel attention/MLP block.
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000
+[hf:CohereForAI/c4ai-command-r-v01 family]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    num_layers=64,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=33792,
+    vocab_size=256000,
+    head_dim=128,
+    qkv_bias=False,
+    parallel_block=True,
+    rope_theta=75_000_000.0,
+    norm="layernorm",
+    act="silu",
+    dtype="bfloat16",
+    tie_embeddings=True,
+    source="hf:CohereForAI/c4ai-command-r-v01",
+)

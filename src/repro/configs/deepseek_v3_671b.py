@@ -1,0 +1,41 @@
+"""deepseek-v3-671b — MoE decoder with MLA, shared expert, and MTP.
+
+61L d_model=7168 128H d_ff=2048(per-expert) vocab=129280, MoE 256 experts
+top-8 + 1 shared, 3 leading dense layers, depth-1 multi-token prediction.
+[arXiv:2412.19437]
+
+MLA dims per the DeepSeek-V3 report: q_lora=1536, kv_lora=512, qk_nope=128,
+qk_rope=64, v_head=128.  Dense layers and the shared expert use the model's
+dense FFN width 18432.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,
+    d_ff=18432,  # dense-layer / shared-expert hidden size
+    vocab_size=129280,
+    use_mla=True,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    num_experts=256,
+    num_shared_experts=1,
+    moe_top_k=8,
+    moe_d_ff=2048,
+    first_dense_layers=3,
+    capacity_factor=1.25,
+    mtp=True,
+    rope_theta=10_000.0,
+    norm="rmsnorm",
+    act="silu",
+    dtype="bfloat16",
+    source="arXiv:2412.19437",
+)

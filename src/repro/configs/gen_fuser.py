@@ -1,0 +1,29 @@
+"""GEN-FUSER — Flan-T5-style encoder-decoder fusion model (Jiang et al. 2023).
+
+The paper uses the open-sourced Flan-T5-XL GEN-FUSER; we train a
+same-family enc-dec from scratch at laptop scale.  Encoder input: query +
+candidate responses (concatenated, separator-delimited); decoder output:
+the fused response.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gen-fuser",
+    family="audio",  # enc-dec plumbing; text tokens are fed to the encoder
+    num_layers=4,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=1024,
+    vocab_size=512,
+    head_dim=32,
+    is_encoder_decoder=True,
+    enc_layers=4,
+    enc_seq=1024,
+    norm="rmsnorm",
+    act="gelu",
+    dtype="float32",
+    tie_embeddings=True,
+    source="Jiang et al. 2023 (LLM-BLENDER GEN-FUSER, Flan-T5 family)",
+)

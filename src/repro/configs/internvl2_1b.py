@@ -1,0 +1,33 @@
+"""internvl2-1b — VLM: InternViT frontend (stub) + Qwen2-0.5B-style LM.
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655 [arXiv:2404.16821]
+
+Per spec the ViT/projector frontend is a STUB: ``input_specs`` feeds
+precomputed patch embeddings (256 tokens of dim 1024, the InternViT-300M
+projector output length for a 448px tile) which the LM consumes through a
+learned projection.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    head_dim=64,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    norm="rmsnorm",
+    norm_eps=1e-6,
+    act="silu",
+    dtype="bfloat16",
+    frontend_tokens=256,
+    frontend_dim=1024,
+    tie_embeddings=True,
+    source="arXiv:2404.16821",
+)

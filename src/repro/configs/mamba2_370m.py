@@ -1,0 +1,26 @@
+"""mamba2-370m — attention-free SSD (state-space duality) stack.
+
+48L d_model=1024 d_ff=0 vocab=50280 ssm_state=128 [arXiv:2405.21060]
+d_inner = 2*d_model = 2048, head_dim 64 -> 32 SSD heads.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    norm="rmsnorm",
+    dtype="bfloat16",
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+)

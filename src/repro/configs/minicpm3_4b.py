@@ -1,0 +1,33 @@
+"""minicpm3-4b — dense decoder with Multi-head Latent Attention (MLA).
+
+62L d_model=2560 40H d_ff=6400 vocab=73448 [hf:openbmb/MiniCPM3-4B]
+
+MLA dims follow the MiniCPM3 model card: q_lora_rank=768, kv_lora_rank=256,
+qk_nope=64, qk_rope=32, v_head=64 (the paper-assigned "GQA kv=40" is the
+head count; MLA caches the 256-d latent, not per-head KV).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    num_layers=62,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73448,
+    use_mla=True,
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_dim=64,
+    qk_rope_dim=32,
+    v_head_dim=64,
+    rope_theta=10_000.0,
+    norm="rmsnorm",
+    act="silu",
+    dtype="bfloat16",
+    tie_embeddings=True,
+    source="hf:openbmb/MiniCPM3-4B",
+)

@@ -1,0 +1,25 @@
+"""MODI quality predictor — DeBERTa-style disentangled-attention encoder.
+
+The paper uses DeBERTa-v3-large as the backbone; we train a same-shape-family
+encoder from scratch at laptop scale (the head is the faithful part:
+CLS -> dropout(0.2) -> GELU -> Linear -> GLU -> Linear(N), Huber delta=0.3,
+Adam lr 3e-4 betas (0.9, 0.98) weight decay 0.01 — paper Table 2 / A.2).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="modi-predictor",
+    family="encoder",
+    num_layers=4,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=1024,
+    vocab_size=512,  # byte-level tokenizer + specials
+    head_dim=32,
+    norm="layernorm",
+    act="gelu",
+    dtype="float32",
+    source="paper A.2 (He et al. 2021 DeBERTa backbone)",
+)

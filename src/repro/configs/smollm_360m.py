@@ -1,0 +1,26 @@
+"""smollm-360m — llama-architecture small dense decoder.
+
+32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152
+[hf:HuggingFaceTB/SmolLM-135M family]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    num_layers=32,
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,
+    d_ff=2560,
+    vocab_size=49152,
+    head_dim=64,
+    rope_theta=10_000.0,
+    norm="rmsnorm",
+    norm_eps=1e-5,
+    act="silu",
+    dtype="bfloat16",
+    tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-135M",
+)

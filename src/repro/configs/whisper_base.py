@@ -1,0 +1,32 @@
+"""whisper-base — encoder-decoder audio backbone; conv/mel frontend stubbed.
+
+6L (enc) + 6L (dec) d_model=512 8H d_ff=2048 vocab=51865 [arXiv:2212.04356]
+
+Per spec the mel-spectrogram + conv feature extractor is a STUB:
+``input_specs`` supplies 1500 precomputed frame embeddings (the output
+length of Whisper's conv frontend for 30s audio) of dim 512.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    head_dim=64,
+    is_encoder_decoder=True,
+    enc_layers=6,
+    enc_seq=1500,
+    frontend_tokens=1500,
+    frontend_dim=512,
+    norm="layernorm",
+    act="gelu",
+    dtype="bfloat16",
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+)

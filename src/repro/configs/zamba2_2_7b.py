@@ -1,0 +1,32 @@
+"""zamba2-2.7b — hybrid: Mamba2 backbone + weight-tied shared attention.
+
+54L d_model=2560 32H (GQA kv=32) d_ff=10240 vocab=32000 ssm_state=64
+[arXiv:2411.15242]
+
+The shared GQA block is applied after every 6 Mamba2 layers with tied
+weights (Zamba2's shared-attention design).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    head_dim=80,
+    ssm_state=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    attn_every=6,
+    rope_theta=10_000.0,
+    norm="rmsnorm",
+    act="silu",
+    dtype="bfloat16",
+    source="arXiv:2411.15242",
+)

@@ -1,0 +1,33 @@
+from repro.core.cost import CostModel, cost_model_from_config, normalize_costs, pool_costs
+from repro.core.epsilon import EpsilonConstraint, pareto_sweep, select_under_budget
+from repro.core.knapsack import (
+    enumerate_pareto,
+    knapsack_reference,
+    knapsack_select,
+    knapsack_value,
+    shift_scores,
+)
+from repro.core.metrics import bartscore, token_f1
+from repro.core.predictor import PredictorConfig, QualityPredictor, build_predictor
+from repro.core.selector import (
+    BestSinglePolicy,
+    FixedSinglePolicy,
+    FullEnsemblePolicy,
+    GreedyRatioPolicy,
+    HybridRouterPolicy,
+    ModiPolicy,
+    RandomPolicy,
+    SelectionPolicy,
+    realized_cost_fraction,
+)
+
+__all__ = [
+    "CostModel", "cost_model_from_config", "normalize_costs", "pool_costs",
+    "EpsilonConstraint", "pareto_sweep", "select_under_budget",
+    "enumerate_pareto", "knapsack_reference", "knapsack_select", "knapsack_value",
+    "shift_scores", "bartscore", "token_f1",
+    "PredictorConfig", "QualityPredictor", "build_predictor",
+    "BestSinglePolicy", "FixedSinglePolicy", "FullEnsemblePolicy",
+    "GreedyRatioPolicy", "HybridRouterPolicy", "ModiPolicy", "RandomPolicy",
+    "SelectionPolicy", "realized_cost_fraction",
+]

@@ -1,0 +1,52 @@
+"""GEN-FUSER (Jiang et al. 2023) — fuses the selected models' responses.
+
+The fuser is a Flan-T5-style enc-dec (``configs/gen_fuser.py``).  Its
+encoder consumes ``query <sep> response_1 <sep> ... <sep> response_k`` and
+the decoder emits the fused response.  This module builds the fusion input
+from token arrays; greedy generation lives in ``repro.serve.generate``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_fusion_input(
+    query: np.ndarray,  # [Sq] tokens
+    responses: Sequence[np.ndarray],  # list of [Sr] token arrays (selected subset)
+    sep_id: int,
+    max_len: int,
+    pad_id: int = 0,
+) -> np.ndarray:
+    """Concatenate query + responses with separators, pad/truncate to max_len."""
+    parts: List[np.ndarray] = [np.asarray(query)]
+    for r in responses:
+        parts.append(np.asarray([sep_id]))
+        parts.append(np.asarray(r))
+    flat = np.concatenate(parts)[:max_len]
+    out = np.full((max_len,), pad_id, np.int32)
+    out[: len(flat)] = flat
+    return out
+
+
+def build_fusion_batch(
+    queries: np.ndarray,  # [B, Sq]
+    responses: np.ndarray,  # [B, N, Sr] all pool responses
+    mask: np.ndarray,  # [B, N] selection
+    sep_id: int,
+    max_len: int,
+    pad_id: int = 0,
+) -> np.ndarray:
+    """[B, max_len] fusion encoder inputs for a batch of selections."""
+    b = queries.shape[0]
+    out = np.zeros((b, max_len), np.int32)
+    for i in range(b):
+        sel = [responses[i, j] for j in range(mask.shape[1]) if mask[i, j]]
+        q = queries[i][queries[i] != pad_id]
+        sel = [r[r != pad_id] for r in sel]
+        out[i] = build_fusion_input(q, sel, sep_id, max_len, pad_id)
+    return out

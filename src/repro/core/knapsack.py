@@ -1,0 +1,141 @@
+"""0/1 knapsack subroutine (paper Algorithm 1, Appendix A.1).
+
+Three implementations:
+
+* :func:`knapsack_reference` — the paper's Algorithm 1, verbatim Python.
+  Ground truth for tests.
+* :func:`knapsack_select` — batched, jittable ``lax.fori_loop`` DP used by
+  the serving engine (one knapsack per query per batch).
+* ``repro.kernels.knapsack`` — Pallas TPU kernel with the DP row resident
+  in VMEM (the selection hot-spot at serving batch sizes).
+
+Profit transformation (paper Eq. 4-5): BARTScores are negative, so profits
+are ``alpha + score`` with ``alpha > max|score|``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Score transformation (Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def shift_scores(scores: jax.Array | np.ndarray, alpha: float | None = None):
+    """Target Score = alpha + BARTScore, alpha > max|BARTScore| (Eq. 4-5)."""
+    s = jnp.asarray(scores, jnp.float32)
+    if alpha is None:
+        alpha = float(jnp.max(jnp.abs(s))) * 1.01 + 1e-6
+    if alpha <= float(jnp.max(jnp.abs(s))):
+        raise ValueError("alpha must exceed max|score| (paper Eq. 5)")
+    return s + alpha, alpha
+
+
+# ---------------------------------------------------------------------------
+# Reference (paper Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def knapsack_reference(models: Sequence[dict], budget: int) -> List[dict]:
+    """Verbatim paper Algorithm 1. models: [{'cost': int, 'target_score': float}]."""
+    n = len(models)
+    dp = [[0.0] * (budget + 1) for _ in range(n + 1)]
+    for i in range(1, n + 1):
+        for j in range(budget + 1):
+            if models[i - 1]["cost"] <= j:
+                dp[i][j] = max(
+                    dp[i - 1][j],
+                    dp[i - 1][j - models[i - 1]["cost"]] + models[i - 1]["target_score"],
+                )
+            else:
+                dp[i][j] = dp[i - 1][j]
+    selected = []
+    j = budget
+    for i in range(n, 0, -1):
+        if dp[i][j] != dp[i - 1][j]:
+            selected.append(models[i - 1])
+            j -= models[i - 1]["cost"]
+    return selected
+
+
+# ---------------------------------------------------------------------------
+# Batched jittable DP
+# ---------------------------------------------------------------------------
+
+
+def knapsack_select(profits: jax.Array, costs: jax.Array, budget: int) -> jax.Array:
+    """Solve Q independent knapsacks.
+
+    profits: [Q, N] float32, non-negative (already alpha-shifted).
+    costs:   [Q, N] int32, >= 1 (bucketized — see cost.normalize_costs).
+    budget:  static int capacity.
+    Returns: [Q, N] bool selection mask, optimal per query.
+    """
+    profits = jnp.asarray(profits, jnp.float32)
+    costs = jnp.asarray(costs, jnp.int32)
+    q, n = profits.shape
+    bp1 = budget + 1
+    js = jnp.arange(bp1, dtype=jnp.int32)
+
+    def item_step(i, carry):
+        dp, take = carry  # dp [Q, B+1]; take [N, Q, B+1] bool
+        c = costs[:, i][:, None]  # [Q,1]
+        p = profits[:, i][:, None]
+        idx = js[None, :] - c  # [Q, B+1]
+        valid = idx >= 0
+        prev = jnp.take_along_axis(dp, jnp.maximum(idx, 0), axis=1)
+        cand = jnp.where(valid, prev + p, -jnp.inf)
+        tk = cand > dp  # strict: ties keep "not taken" (Algorithm 1 backtrack)
+        new_dp = jnp.maximum(dp, cand)
+        return new_dp, take.at[i].set(tk)
+
+    dp0 = jnp.zeros((q, bp1), jnp.float32)
+    take0 = jnp.zeros((n, q, bp1), bool)
+    dp, take = jax.lax.fori_loop(0, n, item_step, (dp0, take0))
+
+    def back_step(k, carry):
+        sel, j = carry  # sel [Q,N] bool; j [Q]
+        i = n - 1 - k
+        t = take[i, jnp.arange(q), j]
+        sel = sel.at[:, i].set(t)
+        j = j - jnp.where(t, costs[:, i], 0)
+        return sel, j
+
+    sel0 = jnp.zeros((q, n), bool)
+    sel, _ = jax.lax.fori_loop(0, n, back_step, (sel0, jnp.full((q,), budget, jnp.int32)))
+    return sel
+
+
+def knapsack_value(profits: jax.Array, costs: jax.Array, budget: int) -> jax.Array:
+    """Optimal total profit per query (no backtrack) — used by tests."""
+    sel = knapsack_select(profits, costs, budget)
+    return jnp.sum(jnp.where(sel, profits, 0.0), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Exact bi-objective enumeration (tests / Pareto ground truth, N <= 20)
+# ---------------------------------------------------------------------------
+
+
+def enumerate_pareto(profits: np.ndarray, costs: np.ndarray) -> List[Tuple[float, float, int]]:
+    """All non-dominated (cost, profit, subset_bitmask) points of one query."""
+    n = len(profits)
+    pts = []
+    for mask in range(1, 1 << n):
+        c = sum(costs[i] for i in range(n) if mask >> i & 1)
+        p = sum(profits[i] for i in range(n) if mask >> i & 1)
+        pts.append((c, p, mask))
+    pts.sort(key=lambda t: (t[0], -t[1]))
+    frontier = []
+    best = -np.inf
+    for c, p, m in pts:
+        if p > best:
+            frontier.append((c, p, m))
+            best = p
+    return frontier

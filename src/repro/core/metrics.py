@@ -1,0 +1,52 @@
+"""Quality metrics — native BARTScore (paper §3, A.4).
+
+BARTScore(candidate -> reference) is the mean conditional log-likelihood of
+the reference under a seq2seq LM given the candidate:
+
+    score = (1/|y|) Σ_t log p(y_t | y_<t, x)
+
+The paper scores with BART-large; the math is model-agnostic, so we compute
+it under the in-framework ``bartscore-scorer`` enc-dec (DESIGN.md §3).
+Scores are negative; higher is better.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.encdec import EncDecLM
+
+
+def bartscore(
+    scorer: EncDecLM,
+    params: dict,
+    cand_tokens: jax.Array,  # [B, Sc] candidate (conditions the encoder)
+    ref_tokens: jax.Array,  # [B, Sr] reference (scored by the decoder)
+    ref_mask: Optional[jax.Array] = None,  # [B, Sr] 1 = real token
+) -> jax.Array:
+    """Per-example BARTScore [B]."""
+    logits = scorer.forward(params, ref_tokens, enc_tokens=cand_tokens)
+    logprobs = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = ref_tokens[:, 1:]
+    lp = jnp.take_along_axis(logprobs[:, :-1], tgt[..., None], axis=-1)[..., 0]  # [B, Sr-1]
+    if ref_mask is None:
+        mask = jnp.ones_like(lp)
+    else:
+        mask = ref_mask[:, 1:].astype(jnp.float32)
+    return jnp.sum(lp * mask, axis=1) / jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+
+
+def token_f1(pred: jax.Array, ref: jax.Array, pad_id: int = 0) -> jax.Array:
+    """Bag-of-token F1 between two token sequences [B, S] (synthetic-task aid)."""
+    def counts(x):
+        v = jnp.arange(512)
+        return jnp.sum((x[:, :, None] == v[None, None, :]) & (x[:, :, None] != pad_id), axis=1)
+
+    cp, cr = counts(pred), counts(ref)
+    overlap = jnp.sum(jnp.minimum(cp, cr), axis=-1).astype(jnp.float32)
+    p = overlap / jnp.maximum(jnp.sum(cp, -1), 1)
+    r = overlap / jnp.maximum(jnp.sum(cr, -1), 1)
+    return jnp.where(p + r > 0, 2 * p * r / jnp.maximum(p + r, 1e-9), 0.0)

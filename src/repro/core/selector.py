@@ -1,0 +1,150 @@
+"""MODI orchestration policy and the baseline selection policies it is
+compared against (paper §1 related work, §3 baselines).
+
+A *policy* maps per-query quality estimates and costs to a subset of the
+pool.  Generation and fusion of the selected models' responses happen in
+``repro.serve.engine``; policies are pure selection logic so they can be
+unit-tested and benchmarked in isolation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.epsilon import EpsilonConstraint, select_under_budget
+
+
+class SelectionPolicy:
+    name: str = "base"
+
+    def select(self, quality: jax.Array, costs: jax.Array) -> jax.Array:
+        """quality/costs: [Q, N] -> bool mask [Q, N]."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class ModiPolicy(SelectionPolicy):
+    """The paper's method: epsilon-constrained 0/1 knapsack on predicted
+    quality (alpha-shifted) with bucketized Kaplan costs.
+
+    Serving guard (beyond-paper): if ε is below even the cheapest member's
+    cost the knapsack returns the empty set — we fall back to the cheapest
+    member so every query gets an answer."""
+
+    eps: EpsilonConstraint
+    name: str = "modi"
+
+    def select(self, quality, costs):
+        mask = select_under_budget(quality, costs, self.eps)
+        costs = jnp.asarray(costs, jnp.float32)
+        cheapest = jax.nn.one_hot(jnp.argmin(costs, axis=1), costs.shape[1], dtype=bool)
+        empty = ~jnp.any(mask, axis=1, keepdims=True)
+        return jnp.where(empty, cheapest, mask)
+
+
+@dataclasses.dataclass
+class FullEnsemblePolicy(SelectionPolicy):
+    """LLM-BLENDER's selection: query every model (cost O(N))."""
+
+    name: str = "llm-blender"
+
+    def select(self, quality, costs):
+        return jnp.ones_like(jnp.asarray(quality), bool)
+
+
+@dataclasses.dataclass
+class RandomPolicy(SelectionPolicy):
+    """Random ensemble of k members (paper Table 1 'Random')."""
+
+    k: int
+    seed: int = 0
+    name: str = "random"
+
+    def select(self, quality, costs):
+        q, n = jnp.asarray(quality).shape
+        rng = jax.random.key(self.seed)
+        scores = jax.random.uniform(rng, (q, n))
+        kth = jnp.sort(scores, axis=1)[:, n - self.k][:, None]
+        return scores >= kth
+
+
+@dataclasses.dataclass
+class BestSinglePolicy(SelectionPolicy):
+    """Route to the single highest-predicted-quality model."""
+
+    name: str = "best-single"
+
+    def select(self, quality, costs):
+        quality = jnp.asarray(quality)
+        return jax.nn.one_hot(jnp.argmax(quality, axis=1), quality.shape[1], dtype=bool)
+
+
+@dataclasses.dataclass
+class FixedSinglePolicy(SelectionPolicy):
+    """Always model i (per-model rows of Table 1)."""
+
+    index: int
+    name: str = "single"
+
+    def select(self, quality, costs):
+        quality = jnp.asarray(quality)
+        mask = jnp.zeros(quality.shape, bool)
+        return mask.at[:, self.index].set(True)
+
+
+@dataclasses.dataclass
+class GreedyRatioPolicy(SelectionPolicy):
+    """FrugalGPT-flavoured greedy: add models by profit/cost ratio until the
+    budget is exhausted (the classic knapsack approximation; shows what the
+    exact DP buys)."""
+
+    eps: EpsilonConstraint
+    name: str = "greedy-ratio"
+
+    def select(self, quality, costs):
+        quality = np.asarray(quality, np.float64)
+        costs = np.asarray(costs, np.float64)
+        qn, n = quality.shape
+        profits = quality - quality.min() + 1e-6  # shift positive
+        budget = self.eps.fraction * costs.sum(axis=1)
+        mask = np.zeros((qn, n), bool)
+        order = np.argsort(-(profits / np.maximum(costs, 1e-9)), axis=1)
+        for qi in range(qn):
+            spent = 0.0
+            for i in order[qi]:
+                if spent + costs[qi, i] <= budget[qi]:
+                    mask[qi, i] = True
+                    spent += costs[qi, i]
+        return jnp.asarray(mask)
+
+
+@dataclasses.dataclass
+class HybridRouterPolicy(SelectionPolicy):
+    """Hybrid-LLM-style (Anonymous 2023b): binary routing between the
+    cheapest and the best model by predicted difficulty (quality gap)."""
+
+    small_index: int
+    large_index: int
+    threshold: float = 0.0
+    name: str = "hybrid-router"
+
+    def select(self, quality, costs):
+        quality = jnp.asarray(quality)
+        gap = quality[:, self.large_index] - quality[:, self.small_index]
+        use_large = gap > self.threshold
+        q, n = quality.shape
+        mask = jnp.zeros((q, n), bool)
+        mask = mask.at[:, self.small_index].set(~use_large)
+        mask = mask.at[:, self.large_index].set(use_large)
+        return mask
+
+
+def realized_cost_fraction(mask: jax.Array, costs: jax.Array) -> jax.Array:
+    """Fraction of the full-ensemble (LLM-BLENDER) cost actually spent."""
+    costs = jnp.asarray(costs, jnp.float32)
+    return jnp.sum(jnp.where(mask, costs, 0.0), axis=1) / jnp.sum(costs, axis=1)

@@ -1,0 +1,23 @@
+from repro.data.batching import fuser_batches, lm_batches, predictor_batches, scorer_batches
+from repro.data.mixinstruct import (
+    DEFAULT_POOL,
+    DOMAIN_NAMES,
+    DOMAINS,
+    POOL_NAMES,
+    PoolMemberSpec,
+    Record,
+    expected_tokens,
+    generate_dataset,
+    member_response,
+    pool_responses,
+    query_cost_matrix,
+)
+from repro.data.tokenizer import TOKENIZER, ByteTokenizer
+
+__all__ = [
+    "fuser_batches", "lm_batches", "predictor_batches", "scorer_batches",
+    "DEFAULT_POOL", "DOMAIN_NAMES", "DOMAINS", "POOL_NAMES",
+    "PoolMemberSpec", "Record", "expected_tokens", "generate_dataset",
+    "member_response", "pool_responses", "query_cost_matrix",
+    "TOKENIZER", "ByteTokenizer",
+]

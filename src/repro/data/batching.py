@@ -1,0 +1,129 @@
+"""Batch builders for every trainable component, plus a generic LM pipeline."""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Sequence
+
+import numpy as np
+
+from repro.data.mixinstruct import PoolMemberSpec, Record, member_response
+from repro.data.tokenizer import TOKENIZER
+
+
+def lm_batches(
+    records: Sequence[Record],
+    batch_size: int,
+    max_len: int,
+    seed: int = 0,
+    member: PoolMemberSpec | None = None,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Decoder-LM batches: ``query <sep> response <eos>`` with loss on the
+    response.  With ``member`` given, responses follow that member's
+    competence profile (used to train live pool models)."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(records))
+    tok = TOKENIZER
+    for start in range(0, len(order) - batch_size + 1, batch_size):
+        seqs, masks = [], []
+        for idx in order[start : start + batch_size]:
+            rec = records[idx]
+            resp = rec.reference if member is None else member_response(member, rec, rng)
+            q = tok.encode(rec.query, bos=True)
+            r = tok.encode(resp, eos=True)
+            seq = q + [tok.sep_id] + r
+            mask = [0] * (len(q) + 1) + [1] * len(r)
+            seqs.append(seq[:max_len])
+            masks.append(mask[:max_len])
+        tokens = tok.pad_batch(seqs, max_len)
+        loss_mask = np.zeros_like(tokens, np.float32)
+        for i, m in enumerate(masks):
+            loss_mask[i, : len(m)] = m
+        yield {"tokens": tokens, "loss_mask": loss_mask}
+
+
+def scorer_batches(
+    records: Sequence[Record],
+    pool: Sequence[PoolMemberSpec],
+    batch_size: int,
+    max_enc: int,
+    max_dec: int,
+    seed: int = 0,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """BARTScore-scorer batches: encoder sees a candidate response ONLY
+    (BARTScore's p(reference | candidate) — including the query would let
+    the scorer shortcut through it on rule-derived references and stop
+    conditioning on candidates at all), decoder is teacher-forced on the
+    reference.  Candidates mix member outputs and clean references so
+    log-likelihood tracks quality."""
+    rng = np.random.default_rng(seed)
+    tok = TOKENIZER
+    order = rng.permutation(len(records))
+    for start in range(0, len(order) - batch_size + 1, batch_size):
+        enc, dec, masks = [], [], []
+        for idx in order[start : start + batch_size]:
+            rec = records[idx]
+            if rng.uniform() < 0.25:
+                cand = rec.reference
+            else:
+                cand = member_response(pool[int(rng.integers(0, len(pool)))], rec, rng)
+            enc.append(tok.encode(cand))
+            d = tok.encode(rec.reference, bos=True, eos=True)
+            dec.append(d)
+            masks.append([1] * len(d))
+        enc_tokens = tok.pad_batch(enc, max_enc)
+        dec_tokens = tok.pad_batch(dec, max_dec)
+        loss_mask = np.zeros_like(dec_tokens, np.float32)
+        for i, m in enumerate(masks):
+            loss_mask[i, : min(len(m), max_dec)] = m[:max_dec]
+        yield {"enc_tokens": enc_tokens, "dec_tokens": dec_tokens, "loss_mask": loss_mask}
+
+
+def fuser_batches(
+    records: Sequence[Record],
+    pool: Sequence[PoolMemberSpec],
+    batch_size: int,
+    max_enc: int,
+    max_dec: int,
+    seed: int = 0,
+    subset_size: int = 3,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """GEN-FUSER batches: encoder sees query + a random subset's responses,
+    decoder is teacher-forced on the reference (fusion target)."""
+    rng = np.random.default_rng(seed)
+    tok = TOKENIZER
+    order = rng.permutation(len(records))
+    for start in range(0, len(order) - batch_size + 1, batch_size):
+        enc, dec, masks = [], [], []
+        for idx in order[start : start + batch_size]:
+            rec = records[idx]
+            members = rng.choice(len(pool), size=subset_size, replace=False)
+            seq = tok.encode(rec.query)
+            for mi in members:
+                seq += [tok.sep_id] + tok.encode(member_response(pool[mi], rec, rng))
+            enc.append(seq)
+            d = tok.encode(rec.reference, bos=True, eos=True)
+            dec.append(d)
+            masks.append([1] * len(d))
+        enc_tokens = tok.pad_batch(enc, max_enc)
+        dec_tokens = tok.pad_batch(dec, max_dec)
+        loss_mask = np.zeros_like(dec_tokens, np.float32)
+        for i, m in enumerate(masks):
+            loss_mask[i, : min(len(m), max_dec)] = m[:max_dec]
+        yield {"enc_tokens": enc_tokens, "dec_tokens": dec_tokens, "loss_mask": loss_mask}
+
+
+def predictor_batches(
+    records: Sequence[Record],
+    scores: np.ndarray,  # [Q, N] quality labels (BARTScore of each member)
+    batch_size: int,
+    max_len: int,
+    seed: int = 0,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """MODI predictor batches: CLS + query tokens -> per-member scores."""
+    rng = np.random.default_rng(seed)
+    tok = TOKENIZER
+    order = rng.permutation(len(records))
+    for start in range(0, len(order) - batch_size + 1, batch_size):
+        idxs = order[start : start + batch_size]
+        tokens = tok.batch_encode([records[i].query for i in idxs], max_len, cls=True)
+        yield {"tokens": tokens, "scores": scores[idxs].astype(np.float32)}

@@ -1,0 +1,207 @@
+"""Synthetic MixInstruct-style benchmark (offline stand-in for Jiang et al.
+2023's 110K-instruction dataset — DESIGN.md §3, §7).
+
+Eight instruction *domains* with rule-computable references, and a pool of
+eight members mirroring the paper's LLM selection set (Table 2).  Each
+member has a per-domain competence profile, chosen so that **no member
+dominates** (the paper's premise), and a realistic Kaplan cost derived from
+the real model's published size.
+
+Two response paths:
+* *behavioral simulation* (fast, controllable): the member emits the
+  reference corrupted at a rate set by its competence — used by the
+  Table-1 benchmark and unit tests;
+* *live models*: tiny in-framework LMs trained per-member on
+  competence-weighted data — used by the end-to-end example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost import CostModel
+
+# ---------------------------------------------------------------------------
+# Instruction domains
+# ---------------------------------------------------------------------------
+
+_WORDS = (
+    "apple river stone cloud tiger maple ember quartz violet breeze "
+    "copper meadow falcon harbor indigo jasmine kernel lantern marble nectar"
+).split()
+
+
+def _d_echo(rng):
+    w = " ".join(rng.choice(_WORDS, rng.integers(2, 5)))
+    return f"Repeat exactly: {w}", w
+
+
+def _d_upper(rng):
+    w = " ".join(rng.choice(_WORDS, rng.integers(2, 4)))
+    return f"Uppercase this text: {w}", w.upper()
+
+
+def _d_reverse(rng):
+    w = str(rng.choice(_WORDS))
+    return f"Reverse the word: {w}", w[::-1]
+
+
+def _d_sort(rng):
+    digits = "".join(map(str, rng.integers(0, 10, rng.integers(4, 8))))
+    return f"Sort the digits ascending: {digits}", "".join(sorted(digits))
+
+
+def _d_add(rng):
+    a, b = int(rng.integers(10, 99)), int(rng.integers(10, 99))
+    return f"What is {a} plus {b}?", str(a + b)
+
+
+def _d_max(rng):
+    xs = rng.integers(10, 99, 3)
+    return f"Which is largest: {xs[0]}, {xs[1]} or {xs[2]}?", str(int(xs.max()))
+
+
+def _d_vowels(rng):
+    w = str(rng.choice(_WORDS))
+    return f"How many vowels are in '{w}'?", str(sum(c in "aeiou" for c in w))
+
+
+def _d_initials(rng):
+    ws = rng.choice(_WORDS, rng.integers(2, 5))
+    return "First letter of each word: " + " ".join(ws), "".join(w[0] for w in ws)
+
+
+DOMAINS: Dict[str, Callable] = {
+    "echo": _d_echo,
+    "upper": _d_upper,
+    "reverse": _d_reverse,
+    "sort": _d_sort,
+    "add": _d_add,
+    "max": _d_max,
+    "vowels": _d_vowels,
+    "initials": _d_initials,
+}
+DOMAIN_NAMES = list(DOMAINS)
+
+
+@dataclasses.dataclass(frozen=True)
+class Record:
+    query: str
+    reference: str
+    domain: str
+    domain_id: int
+
+
+def generate_dataset(n: int, seed: int = 0) -> List[Record]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        di = int(rng.integers(0, len(DOMAIN_NAMES)))
+        name = DOMAIN_NAMES[di]
+        q, ref = DOMAINS[name](rng)
+        out.append(Record(q, ref, name, di))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pool members (paper Table 2's eight LLMs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolMemberSpec:
+    name: str
+    params_b: float  # real model size (non-embedding, approx) for Kaplan cost
+    n_layer: int
+    d_model: int
+    competence: Tuple[float, ...]  # per-domain success probability
+
+    def cost_model(self) -> CostModel:
+        return CostModel(
+            name=self.name,
+            params_active=int(self.params_b * 1e9),
+            n_layer=self.n_layer,
+            d_model=self.d_model,
+        )
+
+
+# Competence rows over (echo, upper, reverse, sort, add, max, vowels, initials).
+# Diverse peaks: every member is best-in-pool somewhere; none dominates.
+DEFAULT_POOL: List[PoolMemberSpec] = [
+    PoolMemberSpec("alpaca-native", 6.7, 32, 4096, (0.95, 0.85, 0.30, 0.40, 0.55, 0.70, 0.35, 0.55)),
+    PoolMemberSpec("vicuna-13b-1.1", 13.0, 40, 5120, (0.90, 0.90, 0.45, 0.60, 0.80, 0.85, 0.50, 0.65)),
+    PoolMemberSpec("dolly-v2-12b", 11.3, 36, 5120, (0.70, 0.60, 0.25, 0.90, 0.45, 0.55, 0.30, 0.40)),
+    PoolMemberSpec("stablelm-tuned-7b", 6.6, 16, 6144, (0.55, 0.45, 0.20, 0.30, 0.35, 0.45, 0.85, 0.30)),
+    PoolMemberSpec("oasst-pythia-12b", 11.3, 36, 5120, (0.85, 0.75, 0.90, 0.50, 0.60, 0.70, 0.45, 0.60)),
+    PoolMemberSpec("koala-7B", 6.7, 32, 4096, (0.80, 0.70, 0.35, 0.45, 0.90, 0.75, 0.40, 0.50)),
+    PoolMemberSpec("flan-t5-xxl", 11.0, 24, 4096, (0.60, 0.80, 0.40, 0.55, 0.70, 0.80, 0.55, 0.90)),
+    PoolMemberSpec("mpt-7b-instruct", 6.6, 32, 4096, (0.75, 0.65, 0.55, 0.50, 0.50, 0.60, 0.60, 0.70)),
+]
+
+POOL_NAMES = [m.name for m in DEFAULT_POOL]
+
+
+# ---------------------------------------------------------------------------
+# Behavioral response simulation
+# ---------------------------------------------------------------------------
+
+_GARBLE = "xqzjvkw"
+
+
+def member_response(spec: PoolMemberSpec, rec: Record, rng: np.random.Generator) -> str:
+    """Simulated response: correct with prob = competence; otherwise degraded
+    (char corruption / truncation / off-task answer)."""
+    comp = spec.competence[rec.domain_id]
+    if rng.uniform() < comp:
+        # correct, with light surface noise so members' phrasings differ
+        resp = rec.reference
+        if rng.uniform() < 0.15:
+            resp = resp + "."
+        return resp
+    mode = rng.integers(0, 3)
+    if mode == 0:  # corrupt characters
+        chars = list(rec.reference)
+        k = max(1, int(len(chars) * rng.uniform(0.3, 0.8)))
+        for i in rng.choice(len(chars), size=min(k, len(chars)), replace=False):
+            chars[i] = _GARBLE[int(rng.integers(0, len(_GARBLE)))]
+        return "".join(chars)
+    if mode == 1:  # truncate
+        cut = max(1, len(rec.reference) // 2)
+        return rec.reference[:cut]
+    # off-task: answer a different random domain's style
+    other = DOMAINS[DOMAIN_NAMES[int(rng.integers(0, len(DOMAIN_NAMES)))]]
+    return other(rng)[1]
+
+
+def pool_responses(
+    pool: Sequence[PoolMemberSpec], records: Sequence[Record], seed: int = 0
+) -> List[List[str]]:
+    """responses[i][j] = member j's response to record i."""
+    rng = np.random.default_rng(seed)
+    return [[member_response(m, r, rng) for m in pool] for r in records]
+
+
+def expected_tokens(spec: PoolMemberSpec, rec: Record) -> float:
+    """t_i(q): expected generated token count (bytes) for this member.
+
+    Weak members ramble less predictably; we use reference length plus a
+    small member-dependent overhead — matching the paper's per-model t_i."""
+    base = len(rec.reference) + 2
+    overhead = 1.0 + 0.1 * (1.0 - float(np.mean(spec.competence)))
+    return base * overhead
+
+
+def query_cost_matrix(
+    pool: Sequence[PoolMemberSpec], records: Sequence[Record]
+) -> np.ndarray:
+    """[Q, N] FLOPs: c_i * t_i(q) (paper Eq. 1)."""
+    out = np.zeros((len(records), len(pool)))
+    for qi, rec in enumerate(records):
+        n_ctx = len(rec.query) + 8
+        for mi, spec in enumerate(pool):
+            cm = spec.cost_model()
+            out[qi, mi] = cm.query_cost(n_ctx, expected_tokens(spec, rec))
+    return out

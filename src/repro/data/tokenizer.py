@@ -1,0 +1,53 @@
+"""Byte-level tokenizer with special tokens (offline, deterministic).
+
+ids 0..255 = raw bytes; specials follow.  Vocab 512 leaves headroom that the
+small paper-core models (predictor / fuser / scorer) share.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import numpy as np
+
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+SEP_ID = 259
+CLS_ID = 260
+VOCAB_SIZE = 512
+
+
+class ByteTokenizer:
+    pad_id = PAD_ID
+    bos_id = BOS_ID
+    eos_id = EOS_ID
+    sep_id = SEP_ID
+    cls_id = CLS_ID
+    vocab_size = VOCAB_SIZE
+
+    def encode(self, text: str, bos: bool = False, eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8", errors="replace"))
+        if bos:
+            ids = [BOS_ID] + ids
+        if eos:
+            ids = ids + [EOS_ID]
+        return ids
+
+    def decode(self, ids: Iterable[int]) -> str:
+        raw = bytes(i for i in ids if 0 <= i < 256)
+        return raw.decode("utf-8", errors="replace")
+
+    def pad_batch(self, seqs: List[List[int]], max_len: int) -> np.ndarray:
+        out = np.full((len(seqs), max_len), PAD_ID, np.int32)
+        for i, s in enumerate(seqs):
+            s = s[:max_len]
+            out[i, : len(s)] = s
+        return out
+
+    def batch_encode(self, texts: List[str], max_len: int, cls: bool = False) -> np.ndarray:
+        seqs = [([CLS_ID] if cls else []) + self.encode(t) for t in texts]
+        return self.pad_batch(seqs, max_len)
+
+
+TOKENIZER = ByteTokenizer()

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each subpackage ships <name>.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd wrapper + pure-JAX fallback) and ref.py (jnp oracle):
+
+  knapsack/          the paper's Algorithm 1 at serving batch sizes
+  flash_attention/   prefill attention (online softmax, GQA index maps)
+  decode_attention/  flash-decoding over ring-buffer KV caches
+  ssd_scan/          Mamba2 chunked state-space-dual scan
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ops import decode_attend_cache
+
+__all__ = ["decode_attention", "decode_attend_cache"]

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: flash-decoding-style single-token GQA attention.
+
+One query token attends over a long KV cache (up to 512k slots for the
+``long_500k`` shape).  Grid (B, KV, num_k_blocks): the cache streams through
+VMEM in ``block_k`` tiles along the innermost sequential axis while the
+grouped query heads' online-softmax state (acc/m/l — tiny: [G, hd]) sits in
+VMEM scratch.  Masking is *position-based* (each slot carries its absolute
+position; -1 = empty), which makes the kernel agnostic to ring-buffer slot
+order — exactly the cache semantics of ``repro.models.attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, window: int, num_k_blocks: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    slot_pos = pos_ref[0]  # [bk]
+    cur = cur_ref[0, 0]  # scalar
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [G, bk]
+    ok = (slot_pos >= 0) & (slot_pos <= cur)
+    if window > 0:
+        ok &= slot_pos > cur - window
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6, 7))
+def decode_attention(
+    q: jax.Array,  # [B, KV, G, hd]
+    k: jax.Array,  # [B, KV, S, hd]
+    v: jax.Array,
+    pos: jax.Array,  # [B, S] int32 slot positions (-1 empty)
+    cur: jax.Array,  # [B] int32 current position
+    window: int = 0,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, kv, g, hd = q.shape
+    s = k.shape[2]
+    block_k = min(block_k, s)
+    pad = (-s) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    sp = k.shape[2]
+    nk = sp // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, num_k_blocks=nk),
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bb, kk, ki: (bb, kk, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, kk, ki: (bb, kk, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, kk, ki: (bb, kk, ki, 0)),
+            pl.BlockSpec((1, block_k), lambda bb, kk, ki: (bb, ki)),
+            pl.BlockSpec((1, 1), lambda bb, kk, ki: (bb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bb, kk, ki: (bb, kk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, pos.astype(jnp.int32), cur.astype(jnp.int32)[:, None])
+    return out

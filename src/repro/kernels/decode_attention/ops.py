@@ -1,0 +1,33 @@
+"""Jitted wrapper matching the model cache layout [B, S, KV, hd]."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attend_cache(
+    q_bshd: jax.Array,  # [B, 1, H, hd] — model layout single step
+    cache_k: jax.Array,  # [B, S, KV, hd]
+    cache_v: jax.Array,
+    cache_pos: jax.Array,  # [B, S]
+    cur: jax.Array,  # [B]
+    window: int = 0,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns attention output in model layout [B, 1, H, hd]."""
+    b, _, h, hd = q_bshd.shape
+    kv = cache_k.shape[2]
+    g = h // kv
+    q = q_bshd[:, 0].reshape(b, kv, g, hd)
+    k = cache_k.swapaxes(1, 2)  # [B, KV, S, hd]
+    v = cache_v.swapaxes(1, 2)
+    if use_pallas:
+        out = decode_attention(q, k, v, cache_pos, cur, window, interpret=interpret)
+    else:
+        out = decode_attention_ref(q, k, v, cache_pos, cur, window)
+    return out.reshape(b, 1, h, hd)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: single-token GQA decode attention over a (ring-buffer)
+KV cache with per-slot absolute positions.
+
+q     [B, KV, G, hd]   one new token, grouped heads
+k, v  [B, KV, S, hd]   cache slots
+pos   [B, S]           absolute position stored in each slot (-1 = empty)
+cur   [B]              current query position
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, cur: jax.Array, window: int = 0
+) -> jax.Array:
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bkgh,bksh->bkgs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    ok = (pos >= 0) & (pos <= cur[:, None])
+    if window > 0:
+        ok &= pos > (cur[:, None] - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32)).astype(q.dtype)

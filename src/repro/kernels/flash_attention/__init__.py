@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ops import attend
+
+__all__ = ["flash_attention", "attend"]

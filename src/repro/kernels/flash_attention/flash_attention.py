@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: flash attention (prefill), GQA-aware.
+
+Grid (B, H, num_q_blocks, num_k_blocks); the K axis is the innermost,
+sequential ("arbitrary") dimension — online-softmax statistics (running max
+``m``, normalizer ``l``, accumulator ``acc``) live in VMEM scratch and carry
+across K steps.  The KV BlockSpec maps the query head to its KV head
+(h // group), so grouped heads stream the same K/V block without
+materializing a repeat.  Block sizes default to 128 (MXU/VPU aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int, block_q: int, block_k: int,
+    num_k_blocks: int, sq: int, sk: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q + (sk - sq if causal else 0)  # align sequence ends
+    k_start = ki * block_k
+    # Skip fully-masked blocks (strictly above the causal diagonal / outside
+    # the window) — they contribute nothing.
+    visible = jnp.asarray(True)
+    if causal:
+        visible = k_start <= q_start + block_q - 1
+    if window > 0:
+        visible = jnp.logical_and(visible, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = jnp.ones((block_q, block_k), bool)
+        if causal:
+            ok &= cols <= rows
+        if window > 0:
+            ok &= cols > rows - window
+        ok &= cols < sk  # tail padding
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]  # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6, 7))
+def flash_attention(
+    q: jax.Array,  # [B, H, Sq, hd]
+    k: jax.Array,  # [B, KV, Sk, hd]
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, sq, hd = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = 1.0 / (hd ** 0.5)
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sq_p, sk_p = q.shape[2], k.shape[2]
+    nq, nk = sq_p // block_q, sk_p // block_k
+
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, num_k_blocks=nk, sq=sq, sk=sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, hh, qi, ki: (bb, hh // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, hh, qi, ki: (bb, hh // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),  # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),  # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),  # l (normalizer)
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq]

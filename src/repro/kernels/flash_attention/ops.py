@@ -1,0 +1,27 @@
+"""Jitted wrapper matching the model activation layout [B, S, H, hd]."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import gqa_attention_ref
+
+
+def attend(
+    q_bshd: jax.Array,  # [B, S, H, hd]
+    k_bskh: jax.Array,  # [B, S, KV, hd]
+    v_bskh: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    q = q_bshd.swapaxes(1, 2)
+    k = k_bskh.swapaxes(1, 2)
+    v = v_bskh.swapaxes(1, 2)
+    if use_pallas:
+        out = flash_attention(q, k, v, causal, window, interpret=interpret)
+    else:
+        out = gqa_attention_ref(q, k, v, causal, window)
+    return out.swapaxes(1, 2)

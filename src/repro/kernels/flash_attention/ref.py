@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) GQA attention.
+
+Layout: q [B, H, Sq, hd]; k, v [B, KV, Sk, hd]; H = KV * group.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gqa_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    b, h, sq, hd = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    qg = q.reshape(b, kv, group, sq, hd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", qg, k.astype(jnp.float32)) * scale
+    sk = k.shape[2]
+    qi = jnp.arange(sq)[:, None] + (sk - sq if causal else 0)  # align ends
+    ki = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= ki <= qi
+    if window > 0:
+        ok &= ki > qi - window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, hd).astype(q.dtype)

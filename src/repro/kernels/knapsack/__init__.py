@@ -1,0 +1,3 @@
+from repro.kernels.knapsack.ops import knapsack_select_pallas, knapsack_select_ref
+
+__all__ = ["knapsack_select_pallas", "knapsack_select_ref"]

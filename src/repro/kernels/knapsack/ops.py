@@ -1,0 +1,27 @@
+"""Jitted public API for the knapsack kernel with a pure-JAX fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.knapsack.knapsack import knapsack_dp_pallas
+from repro.kernels.knapsack.ref import backtrack, knapsack_dp_ref
+
+
+def knapsack_select_pallas(
+    profits: jax.Array, costs: jax.Array, budget: int, interpret: bool = True
+) -> jax.Array:
+    """Drop-in replacement for core.knapsack.knapsack_select."""
+    _, take = knapsack_dp_pallas(
+        jnp.asarray(profits, jnp.float32), jnp.asarray(costs, jnp.int32), budget,
+        interpret=interpret,
+    )
+    return backtrack(take, jnp.asarray(costs, jnp.int32), budget)
+
+
+def knapsack_select_ref(profits: jax.Array, costs: jax.Array, budget: int) -> jax.Array:
+    _, take = knapsack_dp_ref(
+        jnp.asarray(profits, jnp.float32), jnp.asarray(costs, jnp.int32), budget
+    )
+    return backtrack(take, jnp.asarray(costs, jnp.int32), budget)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the batched 0/1-knapsack forward DP.
+
+Returns the take-decision bits; backtracking is a cheap host-side gather
+shared by all implementations (see ops.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def knapsack_dp_ref(profits: jax.Array, costs: jax.Array, budget: int):
+    """profits [Q,N] f32, costs [Q,N] i32 -> (dp_final [Q,B+1], take [Q,N,B+1])."""
+    q, n = profits.shape
+    bp1 = budget + 1
+    js = jnp.arange(bp1, dtype=jnp.int32)
+
+    def item_step(i, carry):
+        dp, take = carry
+        c = costs[:, i][:, None]
+        p = profits[:, i][:, None]
+        idx = js[None, :] - c
+        prev = jnp.take_along_axis(dp, jnp.maximum(idx, 0), axis=1)
+        cand = jnp.where(idx >= 0, prev + p, -jnp.inf)
+        tk = cand > dp
+        return jnp.maximum(dp, cand), take.at[:, i].set(tk)
+
+    dp0 = jnp.zeros((q, bp1), jnp.float32)
+    take0 = jnp.zeros((q, n, bp1), bool)
+    return jax.lax.fori_loop(0, n, item_step, (dp0, take0))
+
+
+def backtrack(take: jax.Array, costs: jax.Array, budget: int) -> jax.Array:
+    """take [Q,N,B+1] bool, costs [Q,N] -> selection mask [Q,N]."""
+    q, n, _ = take.shape
+
+    def step(k, carry):
+        sel, j = carry
+        i = n - 1 - k
+        t = take[jnp.arange(q), i, j]
+        sel = sel.at[:, i].set(t)
+        return sel, j - jnp.where(t, costs[:, i], 0)
+
+    sel0 = jnp.zeros((q, n), bool)
+    sel, _ = jax.lax.fori_loop(0, n, step, (sel0, jnp.full((q,), budget, jnp.int32)))
+    return sel

@@ -1,0 +1,4 @@
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+__all__ = ["ssd", "ssd_scan"]

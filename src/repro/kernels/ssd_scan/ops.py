@@ -1,0 +1,15 @@
+"""Jitted public API for the SSD scan kernel with pure-JAX fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.ref import ssd_chunked, ssd_reference
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+def ssd(x, dt, a, bm, cm, chunk: int = 128, use_pallas: bool = True, interpret: bool = True):
+    """(y, h_final) via the Pallas kernel or the pure-JAX chunked path."""
+    if use_pallas:
+        return ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=interpret)
+    return ssd_chunked(x, dt, a, bm, cm, chunk=chunk)

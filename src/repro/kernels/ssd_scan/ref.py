@@ -1,0 +1,6 @@
+"""Oracle for the SSD scan kernel — re-exports the model-level pure-jnp
+implementations (chunked + naive sequential)."""
+
+from repro.models.ssm import ssd_chunked, ssd_reference
+
+__all__ = ["ssd_chunked", "ssd_reference"]

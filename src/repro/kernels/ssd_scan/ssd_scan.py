@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (arXiv:2405.21060).
+
+Grid (B, NH, num_chunks); chunks are the innermost sequential axis with the
+recurrent state ``h`` [hd, N] carried in VMEM scratch.  Per chunk the kernel
+computes the intra-chunk quadratic term (an L×L "attention" on the MXU),
+the inbound-state contribution, and the chunk-final state update — the
+TPU-native realization of the SSD duality: quadratic inside the chunk,
+linear recurrence across chunks.  B/C projections are shared across heads
+(ngroups=1), so their BlockSpec ignores the head index — grouped heads
+stream the same [L, N] tiles.
+
+Chunk length L should be a multiple of 8 (sublane) and ideally 128 (lane);
+`hd`/`N` are MXU-aligned at 64/128 in the assigned configs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_out_ref, h_ref, *, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # [L, hd]
+    dt = dt_ref[0, 0].astype(jnp.float32)  # [L]
+    a = a_ref[0, 0].astype(jnp.float32)  # [L]
+    bm = b_ref[0].astype(jnp.float32)  # [L, N]
+    cm = c_ref[0].astype(jnp.float32)  # [L, N]
+    h = h_ref[...]  # [hd, N]
+
+    logs = jnp.cumsum(jnp.log(jnp.maximum(a, 1e-30)))  # [L] inclusive
+    l = x.shape[0]
+    li = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    causal = li >= mi
+    # mask exponents BEFORE exp: the non-causal region overflows to inf
+    decay = jnp.exp(jnp.where(causal, logs[:, None] - logs[None, :], -jnp.inf))
+    g = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)  # [L, L]
+    w = decay * g * dt[None, :]
+    y = jnp.dot(w, x, preferred_element_type=jnp.float32)  # intra-chunk
+
+    # inbound state: y[l] += exp(logs[l]) * C_l . h
+    y += jnp.exp(logs)[:, None] * jnp.dot(cm, h.T, preferred_element_type=jnp.float32)
+
+    # chunk-final state: h' = exp(total)*h + x^T @ (B * (tail*dt))
+    total = logs[l - 1]
+    tail = jnp.exp(total - logs) * dt  # [L]
+    h_ref[...] = jnp.exp(total) * h + jnp.dot(
+        x.T, bm * tail[:, None], preferred_element_type=jnp.float32
+    )
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _final():
+        h_out_ref[0, 0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6))
+def ssd_scan(
+    x: jax.Array,  # [B, S, NH, hd]
+    dt: jax.Array,  # [B, S, NH]
+    a: jax.Array,  # [B, S, NH]
+    bm: jax.Array,  # [B, S, N]
+    cm: jax.Array,  # [B, S, N]
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Returns (y [B,S,NH,hd], h_final [B,NH,hd,N])."""
+    b, s, nh, hd = x.shape
+    n = bm.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+
+    # kernel-friendly layouts: [B, NH, S, *]
+    xk = x.swapaxes(1, 2)  # [B, NH, S, hd]
+    dtk = dt.transpose(0, 2, 1)  # [B, NH, S]
+    ak = a.transpose(0, 2, 1)
+
+    y, h_final = pl.pallas_call(
+        functools.partial(_kernel, num_chunks=nc),
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda bb, hh, ci: (bb, hh, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bb, hh, ci: (bb, hh, ci)),
+            pl.BlockSpec((1, 1, chunk), lambda bb, hh, ci: (bb, hh, ci)),
+            pl.BlockSpec((1, chunk, n), lambda bb, hh, ci: (bb, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, hh, ci: (bb, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda bb, hh, ci: (bb, hh, ci, 0)),
+            pl.BlockSpec((1, 1, hd, n), lambda bb, hh, ci: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nh, sp, hd), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, hd, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, n), jnp.float32)],
+        interpret=interpret,
+    )(xk, dtk, ak, bm, cm)
+    return y.swapaxes(1, 2)[:, :s], h_final

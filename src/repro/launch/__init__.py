@@ -1,0 +1,10 @@
+from repro.launch.mesh import make_production_mesh, production_rules
+from repro.launch.shapes import INPUT_SHAPES, adapt_config, shape_skip_reason
+
+__all__ = [
+    "make_production_mesh",
+    "production_rules",
+    "INPUT_SHAPES",
+    "adapt_config",
+    "shape_skip_reason",
+]

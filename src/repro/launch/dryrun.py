@@ -1,0 +1,240 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, prove memory fits, and extract roofline terms.
+
+MUST be run as a module entry point; the device-count override below has to
+execute before jax initializes.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch.mesh import (  # noqa: E402
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+    production_rules,
+)
+from repro.launch.shapes import INPUT_SHAPES, adapt_config, shape_skip_reason  # noqa: E402
+from repro.launch.steps import build_plan  # noqa: E402
+from repro.sharding.api import axis_rules  # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Per-device bytes moved by each collective kind (result-shape sums of
+    the SPMD-partitioned module)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1]
+        kind = None
+        for k in _COLLECTIVES:
+            tok = f" {k}("
+            if tok in rhs:
+                kind = k
+                result_part = rhs.split(tok)[0]
+                break
+        if kind is None:
+            continue
+        if kind + "-start" in rhs or kind + "-done" in rhs:
+            continue
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(result_part):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        counts[kind] += 1
+    return out, counts
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (train) or 2·N_active·D (inference forward)."""
+    n_active = cfg.active_non_embedding_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/row
+
+
+def serve_rules_overrides(cfg, mesh) -> dict:
+    """Serving weight layout: replicate the FSDP dim of the *non-expert*
+    weights when they fit per model shard (kills the per-layer / per-step
+    weight all-gathers that dominate decode — §Perf C); the expert bank
+    keeps its own ``expert_fsdp`` sharding (it never fits replicated)."""
+    model_shards = mesh.shape["model"]
+    expert_params = 0
+    if cfg.num_experts:
+        moe_layers = cfg.num_layers - cfg.first_dense_layers
+        expert_params = moe_layers * cfg.num_experts * cfg.mlp_params(cfg.expert_d_ff)
+    non_expert = cfg.total_params() - expert_params
+    if non_expert * 2 / model_shards < 8e9:
+        return {"fsdp": None}
+    return {}
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, out_dir: str) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    base_cfg = configs.get(arch)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    skip = shape_skip_reason(base_cfg, shape)
+    if skip:
+        rec["skipped"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    cfg = adapt_config(base_cfg, shape)
+    if shape.kind == "train":
+        # sequence-parallel residual stream (Megatron SP): saved activations
+        # rest seq-sharded over the model axis (EXPERIMENTS.md §Perf)
+        overrides = {"act_seq": "model"}
+    else:
+        overrides = serve_rules_overrides(cfg, mesh)
+    rules = production_rules(mesh, overrides)
+
+    t0 = time.time()
+    with axis_rules(rules):
+        plan = build_plan(arch, base_cfg, shape, rules)
+        lowered = jax.jit(plan.step_fn).lower(*plan.args_sds)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    rec.update(description=plan.description, lower_s=round(t_lower, 2),
+               compile_s=round(t_compile, 2), devices=n_dev)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory_error"] = str(e)
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if k in ("flops", "bytes accessed", "transcendentals")}
+    except Exception as e:  # pragma: no cover
+        rec["cost_error"] = str(e)
+
+    hlo = compiled.as_text()
+    coll_bytes, coll_counts = parse_collective_bytes(hlo)
+    rec["collectives"] = {"bytes": coll_bytes, "counts": coll_counts}
+
+    # --- roofline terms (per-device module; see EXPERIMENTS.md §Roofline) ---
+    flops_dev = rec.get("cost", {}).get("flops", 0.0)
+    bytes_dev = rec.get("cost", {}).get("bytes accessed", 0.0)
+    coll_total = float(sum(coll_bytes.values()))
+    mf = model_flops(cfg, shape)
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    rec["roofline"] = {
+        **terms,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "hlo_flops_global": flops_dev * n_dev,
+        "useful_flops_ratio": (mf / (flops_dev * n_dev)) if flops_dev else None,
+    }
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}.json"), "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true", help="every (arch x shape) on --mesh")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = configs.ASSIGNED_ARCHS
+        shapes = list(INPUT_SHAPES)
+    else:
+        archs = [args.arch] if args.arch else configs.ASSIGNED_ARCHS
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch} x {shape} x {args.mesh}"
+            out_path = os.path.join(args.out_dir, f"{arch}_{shape}_{args.mesh}.json")
+            if os.path.exists(out_path):
+                print(f"[skip-cached] {tag}")
+                continue
+            try:
+                rec = run_one(arch, shape, args.mesh, args.out_dir)
+            except Exception:
+                failures += 1
+                print(f"[FAIL] {tag}")
+                traceback.print_exc()
+                continue
+            if "skipped" in rec:
+                print(f"[skipped] {tag}: {rec['skipped']}")
+                if args.out_dir:
+                    os.makedirs(args.out_dir, exist_ok=True)
+                    with open(out_path, "w") as f:
+                        json.dump(rec, f, indent=2)
+                continue
+            r = rec["roofline"]
+            mem = rec.get("memory", {})
+            print(
+                f"[ok] {tag}: compile={rec['compile_s']}s "
+                f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                f"collective={r['collective_s']:.4f}s dominant={r['dominant']} "
+                f"args={mem.get('argument_size_in_bytes', 0)/1e9:.2f}GB "
+                f"temp={mem.get('temp_size_in_bytes', 0)/1e9:.2f}GB"
+            )
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

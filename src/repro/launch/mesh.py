@@ -1,0 +1,40 @@
+"""Production mesh construction (TPU v5e target).
+
+Importing this module never touches jax device state; both helpers are
+functions.  The dry-run forces 512 host devices (see dryrun.py) so both the
+single-pod 16x16 and the 2-pod 2x16x16 meshes can be built.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding.api import AxisRules, default_axis_rules
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape} but found {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def production_rules(mesh: Mesh, overrides: Optional[Mapping] = None) -> AxisRules:
+    return default_axis_rules(mesh, overrides)

@@ -1,0 +1,76 @@
+"""Assigned input shapes and per-(arch, shape) execution plans."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models.config import ModelConfig
+
+LONG_CONTEXT_WINDOW = 8192  # sliding-window size for dense archs at 500k
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# train_4k grad-accumulation microbatch counts (activation-memory driven)
+MICROBATCHES = {
+    "deepseek-v3-671b": 16,
+    "arctic-480b": 16,
+    "command-r-plus-104b": 16,
+    "qwen2.5-32b": 8,
+    "minicpm3-4b": 4,
+    "zamba2-2.7b": 4,
+    "internvl2-1b": 4,
+    "mamba2-370m": 4,
+    "smollm-360m": 4,
+    "whisper-base": 4,
+}
+
+# Giant-MoE training states use factored second moments (Adafactor) — full
+# Adam fp32 state does not fit 16 GB/chip at these sizes (DESIGN.md).
+ADAFACTOR_ARCHS = {"deepseek-v3-671b", "arctic-480b"}
+
+
+def shape_skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """Spec'd skips (recorded in DESIGN.md / EXPERIMENTS.md)."""
+    if shape.name == "long_500k":
+        if cfg.name.startswith("whisper"):
+            return ("enc-dec audio decoder (448-token family spec); 500k decode "
+                    "is out-of-family full attention — skipped per spec")
+    return None
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-specific architecture adaptation.
+
+    ``long_500k`` requires sub-quadratic decode: SSM/hybrid run natively;
+    dense/MoE/VLM archs serve with a sliding-window KV cache (window
+    LONG_CONTEXT_WINDOW) — the beyond-paper serving feature that makes the
+    shape feasible (DESIGN.md §4)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm",):
+        if cfg.family == "hybrid":
+            # shared attention block also windows its cache at 500k
+            return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+        if not cfg.sliding_window:
+            return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def microbatches_for(arch: str, mesh_data_shards: int, global_batch: int) -> int:
+    m = MICROBATCHES.get(arch, 4)
+    while global_batch // m < mesh_data_shards and m > 1:
+        m //= 2
+    return max(m, 1)

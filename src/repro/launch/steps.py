@@ -1,0 +1,361 @@
+"""Step functions + sharded input specs for every (arch × input shape).
+
+Everything here is ``jax.eval_shape``-driven: no real allocation happens
+until a caller runs the compiled step.  The dry-run lowers these with
+ShapeDtypeStructs whose ``.sharding`` carries the full GSPMD layout:
+
+* params — FSDP(ZeRO-3)+tensor-parallel specs from sharding.params;
+* optimizer state — Adam moments like params; Adafactor factored slots with
+  the corresponding reduced specs;
+* train batches — batch dim over ("pod","data");
+* KV/state caches — batch over data, cache length over model
+  (flash-decoding layout).
+
+``train_step`` is grad-accumulation microbatched (activation memory) with
+remat-per-layer inside the layer scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.shapes import (
+    ADAFACTOR_ARCHS,
+    InputShape,
+    adapt_config,
+    microbatches_for,
+    shape_skip_reason,
+)
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM
+from repro.optim import AdamW
+from repro.optim.adafactor import Adafactor, FactoredSlot
+from repro.sharding.api import AxisRules
+from repro.sharding.params import infer_param_specs, spec_drop_dim
+
+
+# ---------------------------------------------------------------------------
+# Spec plumbing
+# ---------------------------------------------------------------------------
+
+
+def _data_axes(rules: AxisRules) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in rules.mesh.axis_names)
+
+
+def _axes_spec(axes: Tuple[str, ...]):
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _div_axes(dim: int, axes: Tuple[str, ...], rules: AxisRules) -> Tuple[str, ...]:
+    while axes:
+        prod = int(np.prod([rules.mesh.shape[a] for a in axes]))
+        if dim % prod == 0:
+            return axes
+        axes = axes[:-1]
+    return ()
+
+
+def _sds(shape, dtype, rules: AxisRules, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(rules.mesh, spec))
+
+
+def _tree_sds(shapes: Any, specs: Any, rules: AxisRules) -> Any:
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, rules, sp), shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def batch_sds(shape, dtype, rules: AxisRules):
+    """Batch-dim-sharded array spec (dim 0 over pod+data, div-checked)."""
+    axes = _div_axes(shape[0], _data_axes(rules), rules)
+    spec = P(_axes_spec(axes), *([None] * (len(shape) - 1)))
+    return _sds(shape, dtype, rules, spec)
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+_CACHE_RULES = {
+    # name -> logical layout for the unstacked (per-layer) rank
+    "k": ("batch", "cache_seq", None, None),
+    "v": ("batch", "cache_seq", None, None),
+    "ckv": ("batch", "cache_seq", None),
+    "kr": ("batch", "cache_seq", None),
+    "pos": ("batch", "cache_seq"),
+    "h": ("batch", "heads", None, None),
+    "conv": ("batch", None, "mlp"),
+    "ck": ("batch", None, "heads", None),
+    "cv": ("batch", None, "heads", None),
+}
+
+
+def infer_cache_specs(cache_shapes: Any, rules: AxisRules) -> Any:
+    def leaf_spec(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = str(k.key)
+                break
+        logical = _CACHE_RULES.get(name)
+        rank = len(leaf.shape)
+        if logical is None:
+            return P()
+        if rank == len(logical) + 1:  # stacked over layers
+            logical = (None,) + logical
+        parts = []
+        used: set = set()
+        for dim, lg in zip(leaf.shape, logical):
+            if lg is None:
+                parts.append(None)
+                continue
+            mesh_axes = rules.rules.get(lg)
+            if mesh_axes is None:
+                parts.append(None)
+                continue
+            if isinstance(mesh_axes, str):
+                mesh_axes = (mesh_axes,)
+            mesh_axes = tuple(a for a in mesh_axes if a not in used)
+            mesh_axes = _div_axes(dim, mesh_axes, rules)
+            if not mesh_axes:
+                parts.append(None)
+                continue
+            used.update(mesh_axes)
+            parts.append(_axes_spec(mesh_axes))
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state specs
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(arch: str):
+    if arch in ADAFACTOR_ARCHS:
+        return Adafactor(learning_rate=1e-3)
+    return AdamW(learning_rate=3e-4)
+
+
+def opt_state_specs(opt, param_specs: Any, param_shapes: Any) -> Any:
+    if isinstance(opt, Adafactor):
+        def slot_spec(spec, shape_struct):
+            rank = len(shape_struct.shape)
+            if rank >= 2:
+                return FactoredSlot(
+                    vr=spec_drop_dim(spec, rank, -1), vc=spec_drop_dim(spec, rank, -2)
+                )
+            return spec
+
+        slots = jax.tree.map(
+            slot_spec, param_specs, param_shapes,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        from repro.optim.adafactor import AdafactorState
+
+        return AdafactorState(step=P(), slots=slots)
+    from repro.optim.adamw import OptState
+
+    return OptState(step=P(), mu=param_specs, nu=param_specs)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """Everything the dry-run needs: the step callable + its arg specs."""
+
+    arch: str
+    shape: InputShape
+    cfg: ModelConfig
+    step_fn: Callable
+    args_sds: Tuple
+    description: str
+
+
+def _constrain_batch(x, rules: AxisRules):
+    axes = _div_axes(x.shape[1], _data_axes(rules), rules)  # dim 1 after micro split
+    spec = P(None, _axes_spec(axes), *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def make_train_step(cfg: ModelConfig, arch: str, rules: AxisRules, num_micro: int):
+    model = build_model(cfg)
+    opt = make_optimizer(arch)
+    p_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    p_specs = infer_param_specs(p_shapes, rules)
+    grad_shardings = jax.tree.map(
+        lambda sp: NamedSharding(rules.mesh, sp), p_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+    def constrain_grads(grads):
+        # keep gradients in the params' FSDP+TP layout — XLA otherwise
+        # chooses replicated for gather-adjoint grads (embed, low-rank projs)
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads, grad_shardings)
+
+    def micro_loss(params, mbatch):
+        loss, _ = model.loss(params, mbatch, remat=True)
+        return loss
+
+    def train_step(params, opt_state, batch):
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        if num_micro == 1:
+            loss, grads = jax.value_and_grad(micro_loss)(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: _constrain_batch(
+                    x.reshape(num_micro, gb // num_micro, *x.shape[1:]), rules
+                ),
+                batch,
+            )
+            zero_g = constrain_grads(jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params))
+
+            def body(carry, mbatch):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(micro_loss)(params, mbatch)
+                g = constrain_grads(g)
+                gsum = jax.tree.map(lambda a, b: a + b, gsum, g)
+                return (gsum, lsum + l), None
+
+            (grads, loss), _ = jax.lax.scan(body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / num_micro, grads)
+            loss = loss / num_micro
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return model, opt, train_step
+
+
+def make_prefill_step(model):
+    if isinstance(model, EncDecLM):
+        def prefill_step(params, batch, cache):
+            return model.prefill(
+                params, batch["dec_tokens"], cache, enc_frontend=batch.get("enc_frontend")
+            )
+    else:
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch["tokens"], cache, frontend=batch.get("frontend"))
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, token, pos, cache):
+        return model.decode_step(params, token, pos, cache)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Input construction per (arch × shape)
+# ---------------------------------------------------------------------------
+
+
+def _train_batch_sds(cfg: ModelConfig, shape: InputShape, rules: AxisRules) -> Dict:
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        batch = {
+            "dec_tokens": batch_sds((gb, s), jnp.int32, rules),
+            "enc_frontend": batch_sds(
+                (gb, cfg.enc_seq, cfg.frontend_dim or cfg.d_model), jnp.bfloat16, rules
+            ),
+            "loss_mask": batch_sds((gb, s), jnp.float32, rules),
+        }
+        return batch
+    text = s - cfg.frontend_tokens
+    batch = {
+        "tokens": batch_sds((gb, text), jnp.int32, rules),
+        "loss_mask": batch_sds((gb, text), jnp.float32, rules),
+    }
+    if cfg.frontend_tokens:
+        batch["frontend"] = batch_sds(
+            (gb, cfg.frontend_tokens, cfg.frontend_dim or cfg.d_model), jnp.bfloat16, rules
+        )
+    return batch
+
+
+def _params_sds(model, rules: AxisRules):
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    specs = infer_param_specs(shapes, rules)
+    return shapes, specs, _tree_sds(shapes, specs, rules)
+
+
+def _cache_sds(model, batch: int, max_seq: int, rules: AxisRules):
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, max_seq))
+    specs = infer_cache_specs(shapes, rules)
+    return _tree_sds(shapes, specs, rules)
+
+
+def build_plan(arch: str, cfg: ModelConfig, shape: InputShape, rules: AxisRules) -> StepPlan:
+    """Assemble the (step_fn, arg specs) pair the dry-run lowers."""
+    cfg = adapt_config(cfg, shape)
+    mesh = rules.mesh
+    data_shards = int(np.prod([mesh.shape[a] for a in _data_axes(rules)]))
+
+    if shape.kind == "train":
+        num_micro = microbatches_for(arch, data_shards, shape.global_batch)
+        model, opt, train_step = make_train_step(cfg, arch, rules, num_micro)
+        p_shapes, p_specs, p_sds = _params_sds(model, rules)
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_specs = opt_state_specs(opt, p_specs, p_shapes)
+        o_sds = _tree_sds(o_shapes, o_specs, rules)
+        b_sds = _train_batch_sds(cfg, shape, rules)
+        return StepPlan(
+            arch, shape, cfg, train_step, (p_sds, o_sds, b_sds),
+            f"train_step micro={num_micro} opt={type(opt).__name__}",
+        )
+
+    model = build_model(cfg)
+    p_shapes, p_specs, p_sds = _params_sds(model, rules)
+
+    if shape.kind == "prefill":
+        gb, s = shape.global_batch, shape.seq_len
+        cache_sds = _cache_sds(model, gb, s, rules)
+        if cfg.is_encoder_decoder:
+            batch = {
+                "dec_tokens": batch_sds((gb, s), jnp.int32, rules),
+                "enc_frontend": batch_sds(
+                    (gb, cfg.enc_seq, cfg.frontend_dim or cfg.d_model), jnp.bfloat16, rules
+                ),
+            }
+        else:
+            text = s - cfg.frontend_tokens
+            batch = {"tokens": batch_sds((gb, text), jnp.int32, rules)}
+            if cfg.frontend_tokens:
+                batch["frontend"] = batch_sds(
+                    (gb, cfg.frontend_tokens, cfg.frontend_dim or cfg.d_model),
+                    jnp.bfloat16, rules,
+                )
+        return StepPlan(
+            arch, shape, cfg, make_prefill_step(model), (p_sds, batch, cache_sds),
+            "prefill_step (chunked attention)",
+        )
+
+    # decode: ONE new token with a seq_len-deep cache
+    gb, s = shape.global_batch, shape.seq_len
+    cache_sds = _cache_sds(model, gb, s, rules)
+    token = batch_sds((gb, 1), jnp.int32, rules)
+    pos = batch_sds((gb,), jnp.int32, rules)
+    slots = model.cache_slots(s) if hasattr(model, "cache_slots") else s
+    return StepPlan(
+        arch, shape, cfg, make_decode_step(model), (p_sds, token, pos, cache_sds),
+        f"serve_step decode (cache slots={slots})",
+    )

@@ -1,0 +1,72 @@
+"""CPU-runnable training driver for any assigned architecture (reduced
+variant) or the paper's own components at full (laptop) scale.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --steps 50
+
+Reduced variants keep the family topology (MoE routing, SSD scan, MLA,
+hybrid shared attention) so the driver exercises the same code paths the
+production mesh runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data import DEFAULT_POOL, generate_dataset, lm_batches, scorer_batches
+from repro.models import build_model
+from repro.optim import AdamW, cosine_with_warmup
+from repro.train import checkpoint, repeat_batches, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=configs.ASSIGNED_ARCHS + configs.EXTRA_ARCHS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=96)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
+    ap.add_argument("--full", action="store_true", help="use the full (not reduced) config")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if not args.full and args.arch in configs.ASSIGNED_ARCHS:
+        cfg = cfg.reduced(dtype="float32")
+    print(f"training {cfg.name}: {cfg.total_params()/1e6:.1f}M params "
+          f"({cfg.family}, {cfg.num_layers}L d={cfg.d_model})")
+
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    recs = generate_dataset(4000, seed=args.seed)
+
+    if cfg.is_encoder_decoder:
+        batches = repeat_batches(
+            lambda ep: scorer_batches(recs, DEFAULT_POOL, args.batch, args.seq, 48, seed=ep)
+        )
+    else:
+        def to_batch(ep):
+            for b in lm_batches(recs, args.batch, args.seq, seed=ep):
+                if cfg.frontend_tokens:
+                    b = dict(b)
+                    b["frontend"] = np.zeros(
+                        (args.batch, cfg.frontend_tokens, cfg.frontend_dim or cfg.d_model),
+                        np.float32,
+                    )
+                yield b
+        batches = repeat_batches(to_batch)
+
+    opt = AdamW(learning_rate=cosine_with_warmup(args.lr, 20, args.steps))
+    result = train(lambda p, b: model.loss(p, b), params, batches, args.steps, optimizer=opt)
+    if args.save:
+        checkpoint.save(args.save, result.params)
+        print(f"saved -> {args.save}")
+    print("final:", result.history[-1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from repro.models.config import ModelConfig, validate_config
+from repro.models.encdec import EncDecLM
+from repro.models.registry import Model, build, build_model, get_config
+from repro.models.transformer import DecoderLM, model_segments
+
+__all__ = [
+    "ModelConfig",
+    "validate_config",
+    "DecoderLM",
+    "EncDecLM",
+    "Model",
+    "build",
+    "build_model",
+    "get_config",
+    "model_segments",
+]

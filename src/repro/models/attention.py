@@ -1,0 +1,471 @@
+"""Attention: GQA (optional bias / sliding window) and MLA (DeepSeek-style
+multi-head latent attention), with full-sequence, prefill and single-token
+decode paths plus ring-buffer KV caches for long-context serving.
+
+Cache convention
+----------------
+GQA cache:  {"k": [B, S, KV, hd], "v": [B, S, KV, hd], "pos": [B, S] int32}
+MLA cache:  {"ckv": [B, S, rank], "kr": [B, S, rope], "pos": [B, S] int32}
+
+``pos`` stores the absolute position held in each slot (-1 = empty), which
+makes a sliding-window ring buffer trivial: slot = position % S, and masking
+is purely position-based, so slots can be written out of order.  RoPE is
+applied at *write* time with the absolute position, so scores never depend
+on slot order.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, apply_rope, dense_init, init_norm
+from repro.sharding import current_rules, logical_constraint
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    if cfg.use_mla:
+        return _init_mla(key, cfg, dtype)
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (d, h, hd), dtype),
+        "wk": dense_init(ks[1], d, (d, kv, hd), dtype),
+        "wv": dense_init(ks[2], d, (d, kv, hd), dtype),
+        "wo": dense_init(ks[3], h * hd, (h, hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def _init_mla(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    nope, rope, vhd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rank = cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    p = {
+        "wdkv": dense_init(ks[0], d, (d, rank), dtype),
+        "wkr": dense_init(ks[1], d, (d, rope), dtype),
+        "kv_norm": init_norm(rank, dtype),
+        "wuk": dense_init(ks[2], rank, (rank, h, nope), dtype),
+        "wuv": dense_init(ks[3], rank, (rank, h, vhd), dtype),
+        "wo": dense_init(ks[4], h * vhd, (h, vhd, d), dtype),
+    }
+    if cfg.q_lora_rank:
+        p["wdq"] = dense_init(ks[5], d, (d, cfg.q_lora_rank), dtype)
+        p["q_norm"] = init_norm(cfg.q_lora_rank, dtype)
+        p["wuq"] = dense_init(ks[6], cfg.q_lora_rank, (cfg.q_lora_rank, h, nope + rope), dtype)
+    else:
+        p["wuq"] = dense_init(ks[6], d, (d, h, nope + rope), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    """Per-layer cache (callers stack over layers)."""
+    if cfg.use_mla:
+        cache = {
+            "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype),
+        }
+    else:
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache = {
+            "k": jnp.zeros((batch, max_seq, kv, hd), dtype),
+            "v": jnp.zeros((batch, max_seq, kv, hd), dtype),
+        }
+    cache["pos"] = jnp.full((batch, max_seq), -1, jnp.int32)
+    return cache
+
+
+def cache_slots(cache: dict) -> int:
+    return cache["pos"].shape[1]
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    """Additive attention bias [B, 1, Sq, Sk] from absolute positions.
+
+    q_pos: [B, Sq]; k_pos: [B, Sk] (-1 marks empty cache slots).
+    """
+    q = q_pos[:, :, None]
+    k = k_pos[:, None, :]
+    ok = (k >= 0) & (k <= q)
+    if window > 0:
+        ok &= k > q - window
+    return jnp.where(ok, 0.0, NEG_INF)[:, None, :, :]
+
+
+# ---------------------------------------------------------------------------
+# GQA core
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+    k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+    q = logical_constraint(q, "batch", "seq", "heads", "head_dim")
+    k = logical_constraint(k, "batch", "seq", "kv_heads", "head_dim")
+    v = logical_constraint(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+# Above this query length, prefill attention runs in query chunks so the
+# [Sq, Sk] score matrix never materializes at full size (pure-JAX analogue
+# of the flash_attention kernel, used on backends without Pallas lowering).
+CHUNKED_PREFILL_THRESHOLD = 4096
+PREFILL_CHUNK = 1024
+
+
+def _expand_kv_if_needed(k, v, num_heads: int):
+    """Repeat KV heads up to the full query-head count when the query heads
+    divide the mesh's model axis but the KV heads do not (e.g. 96H/8KV on a
+    16-wide axis).  The repeated K/V shard over heads, which lets the score
+    tensor shard too — otherwise scores replicate at [B,KV,G,Sq,Sk] size
+    (measured: the temp blow-up of command-r/qwen prefill_32k, §Perf B)."""
+    rules = current_rules()
+    if rules is None:
+        return k, v, False
+    mesh_axes = rules.rules.get("heads")
+    if mesh_axes is None:
+        return k, v, False
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    width = 1
+    for a in mesh_axes:
+        width *= rules.mesh.shape[a]
+    num_kv = k.shape[2]
+    if num_kv % width == 0 or num_heads % width != 0:
+        return k, v, False
+    group = num_heads // num_kv
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    k = logical_constraint(k, "batch", "seq", "heads", "head_dim")
+    v = logical_constraint(v, "batch", "seq", "heads", "head_dim")
+    return k, v, True
+
+
+def _gqa_scores_softmax_out(q, k, v, bias, num_kv: int):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd]; bias: [B,1,Sq,Sk] -> [B,Sq,H,hd]."""
+    b, sq, h, hd = q.shape
+    k, v, expanded = _expand_kv_if_needed(k, v, h)
+    if expanded:
+        num_kv = h
+    group = h // num_kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = q.reshape(b, sq, num_kv, group, hd)
+    # bf16 operands with f32 accumulation (MXU-native); an explicit
+    # .astype(f32) on k/v would materialize an f32 copy of the whole KV
+    # cache per decode step (EXPERIMENTS.md §Perf D).
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    # bias [B,1,Sq,Sk] -> [B,1,1,Sq,Sk] so it broadcasts over (kv, group).
+    scores = scores * scale + bias[:, :, None].astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskh->bqkgh", probs.astype(q.dtype), v, preferred_element_type=jnp.float32
+    )
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _gqa_chunked(q, k, v, q_pos, k_pos, window: int, num_kv: int):
+    """Query-chunked causal attention: scan over Sq blocks; per block the
+    scores are [B, KV, G, C, Sk] — bounded regardless of Sq."""
+    b, sq, h, hd = q.shape
+    chunk = PREFILL_CHUNK
+    pad = (-sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nq = q.shape[1] // chunk
+    qs = q.reshape(b, nq, chunk, h, hd).swapaxes(0, 1)  # [nq, B, C, H, hd]
+    ps = q_pos.reshape(b, nq, chunk).swapaxes(0, 1)
+
+    def body(_, inp):
+        qc, pc = inp
+        bias = _mask_bias(pc, k_pos, window)
+        out = _gqa_scores_softmax_out(qc, k, v, bias, num_kv)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    out = outs.swapaxes(0, 1).reshape(b, nq * chunk, h, hd)
+    return out[:, :sq]
+
+
+def gqa_forward(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full-sequence attention (training, or prefill when ``cache`` given)."""
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    new_cache = None
+    if cache is not None:
+        new_cache = _write_cache_bulk(cache, {"k": k, "v": v}, positions, cfg.sliding_window)
+    if x.shape[1] > CHUNKED_PREFILL_THRESHOLD:
+        out = _gqa_chunked(q, k, v, positions, positions, cfg.sliding_window, cfg.num_kv_heads)
+    else:
+        bias = _mask_bias(positions, positions, cfg.sliding_window)
+        out = _gqa_scores_softmax_out(q, k, v, bias, cfg.num_kv_heads)
+    out = logical_constraint(out, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def gqa_decode(
+    p: dict, x: jax.Array, pos: jax.Array, cfg: ModelConfig, cache: dict
+) -> Tuple[jax.Array, dict]:
+    """Single-token decode. x: [B,1,D]; pos: [B] absolute positions."""
+    positions = pos[:, None]
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    cache = _write_cache_step(cache, {"k": k[:, 0], "v": v[:, 0]}, pos, cfg.sliding_window)
+    bias = _mask_bias(positions, cache["pos"], cfg.sliding_window)
+    # flash-decoding style: the cache length is sharded over the model axis;
+    # GSPMD turns the softmax/out reductions into partial-softmax collectives.
+    ck = logical_constraint(cache["k"], "batch", "cache_seq", "kv_heads", "head_dim")
+    cv = logical_constraint(cache["v"], "batch", "cache_seq", "kv_heads", "head_dim")
+    out = _gqa_scores_softmax_out(q, ck, cv, bias, cfg.num_kv_heads)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA core
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(p: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig):
+    if "wdq" in p:
+        qc = apply_norm(p["q_norm"], x @ p["wdq"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qc, p["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wuq"])
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = apply_rope(
+        q[..., cfg.qk_nope_dim :].swapaxes(1, 2), positions[:, None, :], cfg.rope_theta
+    ).swapaxes(1, 2)
+    # pin head sharding: under sequence-parallel residuals GSPMD otherwise
+    # keeps q seq-sharded and computes ALL heads per device (huge scores)
+    q_nope = logical_constraint(q_nope, "batch", "seq", "heads", None)
+    q_rope = logical_constraint(q_rope, "batch", "seq", "heads", None)
+    return q_nope, q_rope
+
+
+def _mla_latent(p: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig):
+    ckv = apply_norm(p["kv_norm"], x @ p["wdkv"], cfg.norm_eps)  # [B,S,rank]
+    kr = apply_rope(x @ p["wkr"], positions, cfg.rope_theta)  # [B,S,rope] shared head
+    return ckv, kr
+
+
+def mla_forward(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Decompressed MLA for full sequences (training / prefill)."""
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    ckv, kr = _mla_latent(p, x, positions, cfg)
+    new_cache = None
+    if cache is not None:
+        new_cache = _write_cache_bulk(cache, {"ckv": ckv, "kr": kr}, positions, cfg.sliding_window)
+    k_nope = jnp.einsum("bsr,rhn->bshn", ckv, p["wuk"])
+    v = jnp.einsum("bsr,rhv->bshv", ckv, p["wuv"])
+    k_nope = logical_constraint(k_nope, "batch", "seq", "heads", None)
+    v = logical_constraint(v, "batch", "seq", "heads", None)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.qk_nope_dim + cfg.qk_rope_dim, jnp.float32))
+
+    def mla_block(qn, qr, q_pos):
+        s = jnp.einsum("bqhn,bshn->bhqs", qn.astype(jnp.float32), k_nope.astype(jnp.float32))
+        s += jnp.einsum("bqhr,bsr->bhqs", qr.astype(jnp.float32), kr.astype(jnp.float32))
+        bias = _mask_bias(q_pos, positions, cfg.sliding_window)
+        probs = jax.nn.softmax(s * scale + bias.astype(jnp.float32), axis=-1)
+        return jnp.einsum("bhqs,bshv->bqhv", probs, v.astype(jnp.float32)).astype(x.dtype)
+
+    sq = x.shape[1]
+    if sq > CHUNKED_PREFILL_THRESHOLD:
+        chunk = PREFILL_CHUNK
+        pad = (-sq) % chunk
+        qn = jnp.pad(q_nope, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q_nope
+        qr = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q_rope
+        qp = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1) if pad else positions
+        b = x.shape[0]
+        nq = qn.shape[1] // chunk
+        xs = (
+            qn.reshape(b, nq, chunk, *qn.shape[2:]).swapaxes(0, 1),
+            qr.reshape(b, nq, chunk, *qr.shape[2:]).swapaxes(0, 1),
+            qp.reshape(b, nq, chunk).swapaxes(0, 1),
+        )
+        _, outs = jax.lax.scan(lambda c, i: (None, mla_block(*i)), None, xs)
+        out = outs.swapaxes(0, 1).reshape(b, nq * chunk, *outs.shape[3:])[:, :sq]
+    else:
+        out = mla_block(q_nope, q_rope, positions)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def mla_decode(
+    p: dict, x: jax.Array, pos: jax.Array, cfg: ModelConfig, cache: dict
+) -> Tuple[jax.Array, dict]:
+    """Absorbed-projection MLA decode over the latent cache.
+
+    Scores are computed directly against the compressed latent:
+        q_abs = q_nope @ W_uk   (per head, into latent space)
+        s     = q_abs . ckv + q_rope . kr
+        o     = (softmax(s) @ ckv) @ W_uv
+    so the per-step cost is O(S * rank) per head instead of O(S * (nope+v)).
+    """
+    positions = pos[:, None]
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)  # [B,1,H,*]
+    ckv, kr = _mla_latent(p, x, positions, cfg)
+    cache = _write_cache_step(cache, {"ckv": ckv[:, 0], "kr": kr[:, 0]}, pos, cfg.sliding_window)
+    c = logical_constraint(cache["ckv"], "batch", "cache_seq", None).astype(jnp.float32)
+    r = logical_constraint(cache["kr"], "batch", "cache_seq", None).astype(jnp.float32)
+    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), p["wuk"].astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.qk_nope_dim + cfg.qk_rope_dim, jnp.float32))
+    scores = jnp.einsum("bqhr,bsr->bhqs", q_abs, c)
+    scores += jnp.einsum("bqhp,bsp->bhqs", q_rope.astype(jnp.float32), r)
+    bias = _mask_bias(positions, cache["pos"], cfg.sliding_window)
+    probs = jax.nn.softmax(scores * scale + bias.astype(jnp.float32), axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, c)
+    out = jnp.einsum("bqhr,rhv->bqhv", o_lat, p["wuv"].astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, (d, h, hd), dtype),
+        "wk": dense_init(ks[1], d, (d, h, hd), dtype),
+        "wv": dense_init(ks[2], d, (d, h, hd), dtype),
+        "wo": dense_init(ks[3], h * hd, (h, hd, d), dtype),
+    }
+
+
+def cross_kv(p: dict, enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+def cross_attend(p: dict, x: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs, v.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Cache writes
+# ---------------------------------------------------------------------------
+
+
+def _write_cache_bulk(cache: dict, values: dict, positions: jax.Array, window: int) -> dict:
+    """Write a full prefill segment. positions: [B, S] absolute; -1 = padding
+    (dropped — those slots keep pos=-1 and stay masked).
+
+    Full-cache prefill (window == 0) uses a masked OVERLAY instead of a
+    scatter: prompts are right-padded, so slot i holds position i for every
+    real token and the write is pure elementwise select — GSPMD partitions
+    it cleanly.  The general scatter forced an all-gather of the entire
+    global K/V in f32 per layer (measured: the dominant collective of every
+    32k prefill — EXPERIMENTS.md §Perf A)."""
+    slots = cache_slots(cache)
+    b, s = positions.shape
+    if window == 0 and s <= slots:
+        valid = positions >= 0  # [B, S]
+        new = dict(cache)
+        for name, val in values.items():
+            old = cache[name]
+            head = jnp.where(
+                valid.reshape(b, s, *([1] * (old.ndim - 2))),
+                val.astype(old.dtype), old[:, :s],
+            )
+            new[name] = jnp.concatenate([head, old[:, s:]], axis=1) if s < slots else head
+        pos_head = jnp.where(valid, positions.astype(jnp.int32), cache["pos"][:, :s])
+        new["pos"] = (
+            jnp.concatenate([pos_head, cache["pos"][:, s:]], axis=1) if s < slots else pos_head
+        )
+        return new
+    # ring buffer (sliding window): scatter by slot = position % slots
+    idx = positions % slots
+    idx = jnp.where(positions >= 0, idx, slots)  # out-of-range -> dropped
+    new = dict(cache)
+    batch_idx = jnp.broadcast_to(jnp.arange(b)[:, None], idx.shape)
+    for name, val in values.items():
+        new[name] = cache[name].at[batch_idx, idx].set(
+            val.astype(cache[name].dtype), mode="drop"
+        )
+    new["pos"] = cache["pos"].at[batch_idx, idx].set(positions.astype(jnp.int32), mode="drop")
+    return new
+
+
+def _write_cache_step(cache: dict, values: dict, pos: jax.Array, window: int) -> dict:
+    """Write one token per batch row. values[name]: [B, ...]; pos: [B]."""
+    slots = cache_slots(cache)
+    idx = pos % slots if window > 0 else pos
+    new = dict(cache)
+    b = pos.shape[0]
+    batch_idx = jnp.arange(b)
+    for name, val in values.items():
+        new[name] = cache[name].at[batch_idx, idx].set(val.astype(cache[name].dtype))
+    new["pos"] = cache["pos"].at[batch_idx, idx].set(pos.astype(jnp.int32))
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Dispatch helpers
+# ---------------------------------------------------------------------------
+
+
+def attention_forward(p, x, positions, cfg: ModelConfig, cache=None):
+    if cfg.use_mla:
+        return mla_forward(p, x, positions, cfg, cache)
+    return gqa_forward(p, x, positions, cfg, cache)
+
+
+def attention_decode(p, x, pos, cfg: ModelConfig, cache):
+    if cfg.use_mla:
+        return mla_decode(p, x, pos, cfg, cache)
+    return gqa_decode(p, x, pos, cfg, cache)

@@ -1,0 +1,119 @@
+"""Decoder block variants: dense (pre-norm / parallel), MoE, Mamba2."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.moe import apply_moe, init_moe
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key: jax.Array, kind: str, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "mamba":
+        return {"norm": init_norm(cfg.d_model, dtype, cfg.norm),
+                "ssm": ssm_mod.init_ssm(k1, cfg, dtype)}
+    p = {"norm1": init_norm(cfg.d_model, dtype, cfg.norm),
+         "attn": attn.init_attention(k1, cfg, dtype)}
+    if not cfg.parallel_block:
+        p["norm2"] = init_norm(cfg.d_model, dtype, cfg.norm)
+    if kind == "dense":
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "moe":
+        p["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_shared_attn(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    """Zamba2-style weight-tied attention block used every ``attn_every`` layers."""
+    return {"norm": init_norm(cfg.d_model, dtype, cfg.norm),
+            "attn": attn.init_attention(key, cfg, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Apply — full-sequence (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_forward(
+    p: dict,
+    kind: str,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "mamba":
+        h, new_cache = ssm_mod.ssm_forward(p["ssm"], apply_norm(p["norm"], x, cfg.norm_eps), cfg, cache)
+        return x + h, new_cache, aux
+    xin = apply_norm(p["norm1"], x, cfg.norm_eps)
+    a_out, new_cache = attn.attention_forward(p["attn"], xin, positions, cfg, cache)
+    if cfg.parallel_block:
+        if kind == "moe":
+            m_out, aux = apply_moe(p["moe"], xin, cfg)
+        else:
+            m_out = apply_mlp(p["mlp"], xin, cfg.act)
+        return x + a_out + m_out, new_cache, aux
+    x = x + a_out
+    xin2 = apply_norm(p["norm2"], x, cfg.norm_eps)
+    if kind == "moe":
+        m_out, aux = apply_moe(p["moe"], xin2, cfg)
+    else:
+        m_out = apply_mlp(p["mlp"], xin2, cfg.act)
+    return x + m_out, new_cache, aux
+
+
+def block_decode(
+    p: dict,
+    kind: str,
+    x: jax.Array,
+    pos: jax.Array,
+    cfg: ModelConfig,
+    cache: dict,
+) -> Tuple[jax.Array, dict, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "mamba":
+        h, new_cache = ssm_mod.ssm_decode(p["ssm"], apply_norm(p["norm"], x, cfg.norm_eps), cfg, cache)
+        return x + h, new_cache, aux
+    xin = apply_norm(p["norm1"], x, cfg.norm_eps)
+    a_out, new_cache = attn.attention_decode(p["attn"], xin, pos, cfg, cache)
+    if cfg.parallel_block:
+        if kind == "moe":
+            m_out, aux = apply_moe(p["moe"], xin, cfg)
+        else:
+            m_out = apply_mlp(p["mlp"], xin, cfg.act)
+        return x + a_out + m_out, new_cache, aux
+    x = x + a_out
+    xin2 = apply_norm(p["norm2"], x, cfg.norm_eps)
+    if kind == "moe":
+        m_out, aux = apply_moe(p["moe"], xin2, cfg)
+    else:
+        m_out = apply_mlp(p["mlp"], xin2, cfg.act)
+    return x + m_out, new_cache, aux
+
+
+def shared_attn_forward(p, x, positions, cfg, cache=None):
+    xin = apply_norm(p["norm"], x, cfg.norm_eps)
+    a_out, new_cache = attn.attention_forward(p["attn"], xin, positions, cfg, cache)
+    return x + a_out, new_cache
+
+
+def shared_attn_decode(p, x, pos, cfg, cache):
+    xin = apply_norm(p["norm"], x, cfg.norm_eps)
+    a_out, new_cache = attn.attention_decode(p["attn"], xin, pos, cfg, cache)
+    return x + a_out, new_cache

@@ -1,0 +1,275 @@
+"""Architecture configuration for every model family in the framework.
+
+A single :class:`ModelConfig` dataclass describes dense decoders (GQA/MLA),
+MoE decoders, SSM (Mamba2) stacks, hybrid (Zamba2) stacks, encoder-decoder
+models (Whisper / GEN-FUSER) and VLM backbones (InternVL).  The registry in
+``repro.models.registry`` turns a config into a model object.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio | encoder
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    parallel_block: bool = False  # command-r style: attn+mlp share input, summed
+    act: str = "silu"
+    norm: str = "rmsnorm"
+    norm_eps: float = 1e-5
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    dtype: str = "float32"
+
+    # --- Multi-head Latent Attention (DeepSeek-V3 / MiniCPM3) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0  # 0 -> full-rank Q projection
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- Mixture of Experts ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0  # per-expert hidden dim (0 -> d_ff)
+    first_dense_layers: int = 0  # DeepSeek: leading dense layers
+    dense_residual: bool = False  # Arctic: dense MLP in parallel with MoE
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 1e-2
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    attn_every: int = 0  # hybrid: shared attention block every k layers
+
+    # --- Attention variants ---
+    sliding_window: int = 0  # 0 -> full causal attention
+
+    # --- Encoder-decoder ---
+    is_encoder_decoder: bool = False
+    enc_layers: int = 0
+    enc_seq: int = 0  # encoder input length (frontend frames / patches)
+
+    # --- Modality frontend stubs (VLM / audio) ---
+    frontend_tokens: int = 0  # precomputed patch/frame embeddings prepended
+    frontend_dim: int = 0  # 0 -> d_model
+
+    # --- Extras ---
+    mtp: bool = False  # DeepSeek multi-token-prediction auxiliary head
+    source: str = ""  # citation for the config
+
+    # ------------------------------------------------------------------
+    def __post_init__(self) -> None:
+        if self.family not in {"dense", "moe", "ssm", "hybrid", "vlm", "audio", "encoder"}:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.family != "ssm" and self.num_heads and self.num_heads % max(self.num_kv_heads, 1):
+            raise ValueError(f"{self.name}: num_heads must be divisible by num_kv_heads")
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.use_mla:
+            return self.qk_nope_dim + self.qk_rope_dim
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads
+
+    @property
+    def resolved_v_head_dim(self) -> int:
+        if self.use_mla:
+            return self.v_head_dim
+        return self.resolved_head_dim
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if a 500k-token decode step is sub-quadratic for this arch."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0
+
+    # ------------------------------------------------------------------
+    # Parameter accounting (used by the Kaplan cost model in repro.core.cost)
+    # ------------------------------------------------------------------
+    def attn_params_per_layer(self) -> int:
+        d = self.d_model
+        if self.use_mla:
+            hd = self.qk_nope_dim + self.qk_rope_dim
+            q_in = self.q_lora_rank or d
+            p = 0
+            if self.q_lora_rank:
+                p += d * self.q_lora_rank
+            p += q_in * self.num_heads * hd  # q up-projection
+            p += d * (self.kv_lora_rank + self.qk_rope_dim)  # kv down + shared rope key
+            p += self.kv_lora_rank * self.num_heads * (self.qk_nope_dim + self.v_head_dim)
+            p += self.num_heads * self.v_head_dim * d  # output proj
+            return p
+        hd = self.resolved_head_dim
+        p = d * self.num_heads * hd  # Q
+        p += 2 * d * self.num_kv_heads * hd  # K, V
+        p += self.num_heads * hd * d  # O
+        if self.qkv_bias:
+            p += (self.num_heads + 2 * self.num_kv_heads) * hd
+        return p
+
+    def mlp_params(self, hidden: int) -> int:
+        # gated (SwiGLU-style) MLP: up, gate, down
+        return 3 * self.d_model * hidden
+
+    def ssm_params_per_layer(self) -> int:
+        d, di, s = self.d_model, self.d_inner, self.ssm_state
+        nh = self.ssm_num_heads
+        p = d * (2 * di + 2 * s + nh)  # in_proj -> (x, z, B, C, dt)
+        p += self.ssm_conv * (di + 2 * s)  # depthwise conv over x, B, C
+        p += nh * 2  # A_log, D
+        p += di * d  # out_proj
+        return p
+
+    def embedding_params(self) -> int:
+        p = self.vocab_size * self.d_model
+        if not self.tie_embeddings:
+            p *= 2
+        return p
+
+    def layer_params(self, layer_idx: int) -> int:
+        """Total parameters in decoder layer ``layer_idx``."""
+        if self.family == "ssm":
+            return self.ssm_params_per_layer()
+        if self.family == "hybrid":
+            # mamba backbone layer; shared attention counted once in total_params
+            return self.ssm_params_per_layer()
+        p = self.attn_params_per_layer()
+        is_moe = self.num_experts > 0 and layer_idx >= self.first_dense_layers
+        if is_moe:
+            p += self.num_experts * self.mlp_params(self.expert_d_ff)
+            p += self.num_shared_experts * self.mlp_params(self.expert_d_ff)
+            p += self.d_model * self.num_experts  # router
+            if self.dense_residual:
+                p += self.mlp_params(self.d_ff)
+        else:
+            p += self.mlp_params(self.d_ff)
+        return p
+
+    def active_layer_params(self, layer_idx: int) -> int:
+        """Parameters touched per token (MoE: only routed top-k experts)."""
+        if self.family in ("ssm", "hybrid"):
+            return self.layer_params(layer_idx)
+        p = self.attn_params_per_layer()
+        is_moe = self.num_experts > 0 and layer_idx >= self.first_dense_layers
+        if is_moe:
+            p += self.moe_top_k * self.mlp_params(self.expert_d_ff)
+            p += self.num_shared_experts * self.mlp_params(self.expert_d_ff)
+            p += self.d_model * self.num_experts
+            if self.dense_residual:
+                p += self.mlp_params(self.d_ff)
+        else:
+            p += self.mlp_params(self.d_ff)
+        return p
+
+    def non_embedding_params(self) -> int:
+        total = sum(self.layer_params(i) for i in range(self.num_layers))
+        if self.family == "hybrid" and self.attn_every:
+            total += self.attn_params_per_layer()  # single shared block
+        if self.is_encoder_decoder:
+            enc_layer = self.attn_params_per_layer() + self.mlp_params(self.d_ff)
+            total += self.enc_layers * enc_layer
+            total += self.num_layers * self.attn_params_per_layer()  # cross-attn
+        return total
+
+    def active_non_embedding_params(self) -> int:
+        total = sum(self.active_layer_params(i) for i in range(self.num_layers))
+        if self.family == "hybrid" and self.attn_every:
+            total += self.attn_params_per_layer()
+        if self.is_encoder_decoder:
+            enc_layer = self.attn_params_per_layer() + self.mlp_params(self.d_ff)
+            total += self.enc_layers * enc_layer
+            total += self.num_layers * self.attn_params_per_layer()
+        return total
+
+    def total_params(self) -> int:
+        return self.non_embedding_params() + self.embedding_params()
+
+    # ------------------------------------------------------------------
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family variant for CPU smoke tests."""
+        small = dict(
+            num_layers=2,
+            d_model=min(self.d_model, 128),
+            vocab_size=min(self.vocab_size, 512),
+        )
+        if self.num_heads:
+            kv = min(self.num_kv_heads, 2)
+            heads = max(kv, min(self.num_heads, 4))
+            heads -= heads % kv
+            small.update(num_heads=heads, num_kv_heads=kv, head_dim=32)
+        if self.d_ff:
+            small["d_ff"] = min(self.d_ff, 256)
+        if self.use_mla:
+            small.update(
+                q_lora_rank=min(self.q_lora_rank, 64) if self.q_lora_rank else 0,
+                kv_lora_rank=32, qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32,
+                head_dim=0,
+            )
+        if self.num_experts:
+            small.update(num_experts=4, moe_top_k=min(self.moe_top_k, 2),
+                         moe_d_ff=64, first_dense_layers=min(self.first_dense_layers, 1))
+        if self.ssm_state:
+            small.update(ssm_state=16, ssm_head_dim=32)
+        if self.attn_every:
+            small["attn_every"] = 2
+        if self.is_encoder_decoder:
+            small.update(enc_layers=2, enc_seq=min(self.enc_seq, 16))
+        if self.frontend_tokens:
+            small["frontend_tokens"] = 8
+        if self.sliding_window:
+            small["sliding_window"] = 16
+        small["name"] = self.name + "-smoke"
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+def validate_config(cfg: ModelConfig) -> None:
+    assert cfg.num_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 0
+    if cfg.family in ("dense", "moe", "vlm", "audio", "encoder"):
+        assert cfg.num_heads > 0
+        hd = cfg.resolved_head_dim
+        assert hd > 0
+    if cfg.use_mla:
+        assert cfg.kv_lora_rank > 0 and cfg.qk_rope_dim > 0 and cfg.v_head_dim > 0
+    if cfg.num_experts:
+        assert cfg.moe_top_k > 0
+    if cfg.family in ("ssm", "hybrid"):
+        assert cfg.ssm_state > 0
+        assert cfg.d_inner % cfg.ssm_head_dim == 0

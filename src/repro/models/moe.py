@@ -1,0 +1,257 @@
+"""Mixture-of-Experts layer.
+
+Production path: expert-parallel execution under ``shard_map`` — expert
+weights are sharded over the ``model`` mesh axis, tokens over ``data``.
+Each device routes its *local* tokens to its *local* experts with a
+capacity-bounded gather/scatter dispatch (no O(T*E*C) one-hot tensors), and
+partial outputs are summed over the ``model`` axis with a single psum — the
+same collective footprint as a megatron MLP.
+
+Single-device path (tests / smoke configs): identical math with
+``E_local == E`` and no psum.
+
+Supports DeepSeek-V3-style shared experts and Arctic-style dense-residual
+MLP in parallel with the routed experts.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import activation, apply_mlp, dense_init, init_mlp
+from repro.sharding import current_rules, logical_constraint
+
+try:  # jax>=0.4.35 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.expert_d_ff
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], d, (d, e), jnp.float32),
+        "experts": {
+            "wi": dense_init(ks[1], d, (e, d, f), dtype),
+            "wg": dense_init(ks[2], d, (e, d, f), dtype),
+            "wo": dense_init(ks[3], f, (e, f, d), dtype),
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.num_shared_experts * f, dtype)
+    if cfg.dense_residual:
+        p["dense"] = init_mlp(ks[5], d, cfg.d_ff, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing + capacity dispatch on local tokens / local experts
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_compute_combine(
+    x: jax.Array,  # [T, D] local tokens
+    router_w: jax.Array,  # [D, E] (replicated)
+    experts: dict,  # wi/wg/wo with leading dim E_local
+    cfg: ModelConfig,
+    e_offset: jax.Array,  # scalar: first expert id owned locally
+    capacity: int,
+    axis_name: Optional[str],
+    data_axes: Tuple[str, ...] = (),
+) -> Tuple[jax.Array, jax.Array]:
+    t, d = x.shape
+    e_local = experts["wi"].shape[0]
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, top_idx = jax.lax.top_k(probs, cfg.moe_top_k)  # [T, k]
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss over the *global* batch.
+    num_e = probs.shape[-1]
+    occupancy = jax.nn.one_hot(top_idx[:, 0], num_e, dtype=jnp.float32)
+    frac_tokens = jnp.mean(occupancy, axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    for ax in data_axes:
+        frac_tokens = jax.lax.pmean(frac_tokens, axis_name=ax)
+        frac_probs = jax.lax.pmean(frac_probs, axis_name=ax)
+    aux = num_e * jnp.sum(frac_tokens * frac_probs)
+
+    # Capacity-bounded scatter of token ids into [E_local, C] slots.
+    slot_tok = jnp.full((e_local, capacity), t, jnp.int32)  # t == padding row
+    counts = jnp.zeros((e_local,), jnp.int32)
+    choice_meta = []
+    tok_ids = jnp.arange(t, dtype=jnp.int32)
+    e_range = jnp.arange(e_local, dtype=jnp.int32)
+    for j in range(cfg.moe_top_k):
+        e_j = top_idx[:, j].astype(jnp.int32) - e_offset
+        valid = (e_j >= 0) & (e_j < e_local)
+        onehot = ((e_j[:, None] == e_range[None, :]) & valid[:, None]).astype(jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1 + counts[None, :]
+        pos_j = jnp.sum(pos * onehot, axis=1)
+        counts = counts + jnp.sum(onehot, axis=0)
+        keep = valid & (pos_j < capacity)
+        dest_e = jnp.where(keep, e_j, 0)
+        dest_c = jnp.where(keep, pos_j, capacity)  # capacity slot -> dropped
+        slot_tok = slot_tok.at[dest_e, dest_c].set(
+            jnp.where(keep, tok_ids, t), mode="drop"
+        )
+        choice_meta.append((keep, dest_e, jnp.minimum(dest_c, capacity - 1), gates[:, j]))
+
+    # Gather expert inputs and run the gated MLP on all local experts.
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    expert_in = x_pad[slot_tok]  # [E_local, C, D]
+    act = activation(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", expert_in, experts["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", expert_in, experts["wi"]
+    )
+    expert_out = jnp.einsum("ecf,efd->ecd", h, experts["wo"])  # [E_local, C, D]
+
+    # Combine: gather each choice's slot output back to token order.
+    y = jnp.zeros((t, d), jnp.float32)
+    for keep, dest_e, dest_c, gate in choice_meta:
+        val = expert_out[dest_e, dest_c].astype(jnp.float32)  # [T, D]
+        y = y + jnp.where(keep[:, None], gate[:, None] * val, 0.0)
+
+    if axis_name is not None:
+        y = jax.lax.psum(y, axis_name=axis_name)
+        aux = jax.lax.pmean(aux, axis_name=axis_name)
+    return y.astype(x.dtype), aux
+
+
+def _capacity(tokens_local: int, cfg: ModelConfig) -> int:
+    c = int(tokens_local * cfg.moe_top_k / max(cfg.num_experts, 1) * cfg.capacity_factor)
+    return max(c, cfg.moe_top_k)
+
+
+# ---------------------------------------------------------------------------
+# Public layer
+# ---------------------------------------------------------------------------
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y, aux_loss). Routed experts + shared/dense branches."""
+    b, s, d = x.shape
+    rules = current_rules()
+    routed, aux = _apply_routed(p, x, cfg, rules)
+    y = routed
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, cfg.act)
+    if "dense" in p:
+        y = y + apply_mlp(p["dense"], x, cfg.act)
+    return y, aux
+
+
+def _apply_routed(p, x, cfg: ModelConfig, rules) -> Tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    use_spmd = False
+    if rules is not None:
+        mesh = rules.mesh
+        names = set(mesh.axis_names)
+        use_spmd = "model" in names and mesh.shape["model"] > 1
+    if not use_spmd:
+        y, aux = _dispatch_compute_combine(
+            flat, p["router"], p["experts"], cfg,
+            jnp.int32(0), _capacity(b * s, cfg), axis_name=None,
+        )
+        return y.reshape(b, s, d), aux
+
+    mesh = rules.mesh
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    data_shards = 1
+    for a in data_axes:
+        data_shards *= mesh.shape[a]
+    model_shards = mesh.shape["model"]
+    token_axes = data_axes
+    if (b * s) % data_shards != 0:
+        # Tiny token counts (e.g. long-context decode, batch=1): replicate
+        # tokens over the data axes, still shard experts over ``model``.
+        token_axes = ()
+        data_shards = 1
+    t_local = (b * s) // data_shards
+    e_local = cfg.num_experts // model_shards
+    cap = _capacity(t_local, cfg)
+
+    batch_spec = token_axes if len(token_axes) > 1 else (token_axes[0] if token_axes else None)
+    loc_data_axes = token_axes
+
+    # Expert weights rest FSDP-sharded over the ``expert_fsdp`` axes on
+    # their d_model / d_ff dim (ZeRO-3) and are gathered just-in-time
+    # inside the shard_map.  An ``expert_fsdp: None`` rules override (small
+    # models in serving) turns the gather off entirely.
+    conf = rules.rules.get("expert_fsdp")
+    if conf is None:
+        conf_axes: tuple = ()
+    elif isinstance(conf, str):
+        conf_axes = (conf,)
+    else:
+        conf_axes = tuple(conf)
+    conf_axes = tuple(a for a in conf_axes if a in mesh.axis_names)
+
+    def fsdp_axes_for(dim: int):
+        axes = conf_axes
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if dim % prod == 0:
+                return axes
+            axes = axes[:-1]
+        return ()
+
+    e_shapes = {k: v.shape for k, v in p["experts"].items()}
+    gather_axes = {k: fsdp_axes_for(shape[1]) for k, shape in e_shapes.items()}
+    expert_specs = {
+        k: P("model", (ax if len(ax) > 1 else (ax[0] if ax else None)), None)
+        for k, ax in gather_axes.items()
+    }
+
+    def local_fn(flat_loc, router_w, experts_loc):
+        gathered = {
+            k: (jax.lax.all_gather(w, gather_axes[k], axis=1, tiled=True)
+                if gather_axes[k] else w)
+            for k, w in experts_loc.items()
+        }
+        e_off = jax.lax.axis_index("model").astype(jnp.int32) * e_local
+        return _dispatch_compute_combine(
+            flat_loc, router_w, gathered, cfg, e_off, cap,
+            axis_name="model", data_axes=loc_data_axes,
+        )
+
+    y, aux = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(batch_spec, None), P(), expert_specs),
+        out_specs=(P(batch_spec, None), P()),
+        check_vma=False,
+    )(flat, p["router"], p["experts"])
+    return y.reshape(b, s, d), aux
+
+
+def moe_param_specs(cfg: ModelConfig) -> dict:
+    """Logical axes for MoE params (see sharding.api)."""
+    specs = {
+        "router": ("embed", None),
+        "experts": {
+            "wi": ("experts", "embed", "expert_mlp"),
+            "wg": ("experts", "embed", "expert_mlp"),
+            "wo": ("experts", "expert_mlp", "embed"),
+        },
+    }
+    if cfg.num_shared_experts:
+        specs["shared"] = {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if cfg.dense_residual:
+        specs["dense"] = {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    return specs

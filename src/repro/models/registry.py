@@ -1,0 +1,28 @@
+"""Model registry: build a model object from a ModelConfig or arch id."""
+
+from __future__ import annotations
+
+from typing import Union
+
+from repro.models.config import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM
+
+Model = Union[DecoderLM, EncDecLM]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+def get_config(arch: str) -> ModelConfig:
+    """Resolve an architecture id to its config (see repro.configs)."""
+    from repro import configs
+
+    return configs.get(arch)
+
+
+def build(arch: str) -> Model:
+    return build_model(get_config(arch))

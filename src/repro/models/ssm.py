@@ -1,0 +1,259 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Prefill/training uses the chunked SSD algorithm (arXiv:2405.21060):
+intra-chunk quadratic "attention" + inter-chunk state recurrence via
+``lax.scan``.  Decode is the O(1) recurrent state update.  The per-chunk
+inner computation is the compute hot-spot mirrored by the Pallas kernel in
+``repro.kernels.ssd_scan``; this module is the pure-JAX production path and
+oracle.
+
+Layout conventions (ngroups = 1):
+    x   [B, S, nh, hd]   inputs split into SSD heads
+    dt  [B, S, nh]       softplus-discretized step sizes
+    a   [B, S, nh]       per-step decay = exp(-exp(A_log) * dt)
+    Bm  [B, S, N]        input projection (shared across heads)
+    Cm  [B, S, N]        output projection (shared across heads)
+    h   [B, nh, hd, N]   recurrent state
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, dense_init, init_norm
+from repro.sharding import logical_constraint
+
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# Params / cache
+# ---------------------------------------------------------------------------
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    proj_out = 2 * di + 2 * n + nh  # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, (d, proj_out), dtype),
+        "conv_w": dense_init(ks[1], cfg.ssm_conv, (cfg.ssm_conv, conv_dim(cfg)), dtype),
+        "conv_b": jnp.zeros((conv_dim(cfg),), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": init_norm(di, dtype),
+        "out_proj": dense_init(ks[2], di, (di, d), dtype),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Projections shared by all paths
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(p: dict, x: jax.Array, cfg: ModelConfig):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    proj = x @ p["in_proj"]
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * n]
+    dt_raw = proj[..., di + di + 2 * n :]  # [B,S,nh]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(p: dict, xbc: jax.Array, prev: Optional[jax.Array]):
+    """Depthwise causal conv over [B, S, C] with kernel [K, C].
+
+    ``prev``: trailing K-1 inputs from an earlier segment (decode/prefill
+    continuation) or None for a fresh zero history.
+    """
+    k = p["conv_w"].shape[0]
+    b = xbc.shape[0]
+    if prev is None:
+        prev = jnp.zeros((b, k - 1, xbc.shape[-1]), xbc.dtype)
+    full = jnp.concatenate([prev, xbc], axis=1)  # [B, S+K-1, C]
+    out = sum(full[:, i : i + xbc.shape[1]] * p["conv_w"][i] for i in range(k))
+    out = jax.nn.silu(out + p["conv_b"])
+    new_prev = full[:, -(k - 1) :] if k > 1 else full[:, :0]
+    return out, new_prev
+
+
+def _discretize(p: dict, dt_raw: jax.Array):
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,nh]
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)  # [B,S,nh]
+    return dt, a
+
+
+def _gated_group_norm(p: dict, y: jax.Array, z: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Mamba2 RMSNormGated with per-SSD-head groups.
+
+    Normalizing over the full d_inner would reduce across the model-sharded
+    dim and force a per-layer all-gather of [B,S,d_inner] (measured: the
+    dominant collective of zamba2 prefill — EXPERIMENTS.md §Perf A).
+    Head-group norm keeps the reduction inside a shard.
+    """
+    *lead, di = y.shape
+    nh, hd = cfg.ssm_num_heads, cfg.ssm_head_dim
+    g = (y * jax.nn.silu(z)).reshape(*lead, nh, hd).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(ms + cfg.norm_eps)
+    g = g.reshape(*lead, di) * p["gate_norm"]["scale"].astype(jnp.float32)
+    return g.astype(y.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (prefill / training)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, S, nh, hd]
+    dt: jax.Array,  # [B, S, nh]
+    a: jax.Array,  # [B, S, nh]
+    Bm: jax.Array,  # [B, S, N]
+    Cm: jax.Array,  # [B, S, N]
+    h0: Optional[jax.Array] = None,  # [B, nh, hd, N]
+    chunk: int = CHUNK,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,nh,hd], h_final [B,nh,hd,N]). Pure-jnp oracle path."""
+    b, s, nh, hd = x.shape
+    n = Bm.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    def rs(t, tail):  # [B, S, ...] -> [nc, B, chunk, ...]
+        return t.reshape(b, nc, chunk, *tail).swapaxes(0, 1)
+
+    xs = (rs(x, (nh, hd)), rs(dt, (nh,)), rs(a, (nh,)), rs(Bm, (n,)), rs(Cm, (n,)))
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+
+    def step(h, inp):
+        xc, dtc, ac, bc, cc = inp
+        y, h_new = _ssd_chunk(xc, dtc, ac, bc, cc, h)
+        return h_new, y
+
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, nc * chunk, nh, hd)
+    return y[:, :s], h_final
+
+
+def _ssd_chunk(xc, dtc, ac, bc, cc, h_in):
+    """One SSD chunk.
+
+    xc [B,L,nh,hd], dtc/ac [B,L,nh], bc/cc [B,L,N], h_in [B,nh,hd,N].
+    """
+    f32 = jnp.float32
+    xc, dtc, ac, bc, cc = (t.astype(f32) for t in (xc, dtc, ac, bc, cc))
+    logs = jnp.cumsum(jnp.log(jnp.maximum(ac, 1e-30)), axis=1)  # [B,L,nh] inclusive
+
+    # Intra-chunk: y[l] += sum_{m<=l} prod(a[m+1..l]) * (C_l . B_m) * dt_m * x_m
+    # prod(a[m+1..l]) = exp(logs[l] - logs[m]).  Mask BEFORE the exp: the
+    # non-causal region has positive exponents that overflow to inf, and
+    # grad-of-where turns masked infs into NaN gradients.
+    l_idx = jnp.arange(logs.shape[1])
+    causal = (l_idx[:, None] >= l_idx[None, :])[None, :, :, None]
+    delta = logs[:, :, None, :] - logs[:, None, :, :]  # [B,L(l),L(m),nh]
+    w = jnp.exp(jnp.where(causal, delta, -jnp.inf))
+    g = jnp.einsum("bln,bmn->blm", cc, bc)  # [B,L,L]
+    wdt = w * g[..., None] * dtc[:, None, :, :]  # [B,l,m,nh]
+    y = jnp.einsum("blmh,bmhd->blhd", wdt, xc)
+
+    # Contribution of the incoming state: y[l] += C_l . (prod(a[1..l]) * h_in)
+    y += jnp.einsum("bln,blh,bhdn->blhd", cc, jnp.exp(logs), h_in)
+
+    # Chunk-final state: h = prod(a over chunk)*h_in + sum_m prod(a[m+1..L]) dt_m B_m x_m
+    total = logs[:, -1]  # [B,nh]
+    tail = jnp.exp(total[:, None, :] - logs)  # [B,L,nh]
+    h_new = jnp.exp(total)[:, :, None, None] * h_in
+    h_new += jnp.einsum("blh,bln,blhd->bhdn", tail * dtc, bc, xc)
+    return y, h_new
+
+
+def ssd_reference(x, dt, a, Bm, Cm, h0=None):
+    """Naive sequential scan — ground truth for tests."""
+    b, s, nh, hd = x.shape
+    n = Bm.shape[-1]
+    h = jnp.zeros((b, nh, hd, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    ys = []
+    for t in range(s):
+        upd = jnp.einsum("bh,bhd,bn->bhdn", dt[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32), Bm[:, t].astype(jnp.float32))
+        h = a[:, t].astype(jnp.float32)[:, :, None, None] * h + upd
+        ys.append(jnp.einsum("bn,bhdn->bhd", Cm[:, t].astype(jnp.float32), h))
+    return jnp.stack(ys, axis=1), h
+
+
+# ---------------------------------------------------------------------------
+# Block-level forward / decode
+# ---------------------------------------------------------------------------
+
+
+def ssm_forward(
+    p: dict, x: jax.Array, cfg: ModelConfig, cache: Optional[dict] = None
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full-sequence Mamba2 block. x: [B, S, D]."""
+    b, s, _ = x.shape
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    prev = cache["conv"] if cache is not None else None
+    conv_out, new_prev = _causal_conv(p, xbc, prev)
+    xin = conv_out[..., :di].reshape(b, s, nh, hd)
+    xin = logical_constraint(xin, "batch", "seq", "heads", "head_dim")
+    Bm = conv_out[..., di : di + n]
+    Cm = conv_out[..., di + n :]
+    dt, a = _discretize(p, dt_raw)
+    h0 = cache["h"] if cache is not None else None
+    y, h_final = ssd_chunked(xin, dt, a, Bm, Cm, h0)
+    y = y.astype(x.dtype) + (p["D"].astype(x.dtype))[None, None, :, None] * xin
+    y = y.reshape(b, s, di)
+    y = _gated_group_norm(p, y, z, cfg)
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_final, "conv": new_prev.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def ssm_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict) -> Tuple[jax.Array, dict]:
+    """Single-token recurrent step. x: [B, 1, D]."""
+    b = x.shape[0]
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    conv_out, new_prev = _causal_conv(p, xbc, cache["conv"])
+    xin = conv_out[:, 0, :di].reshape(b, nh, hd)
+    Bm = conv_out[:, 0, di : di + n]
+    Cm = conv_out[:, 0, di + n :]
+    dt, a = _discretize(p, dt_raw)
+    dt, a = dt[:, 0], a[:, 0]  # [B, nh]
+    h = cache["h"]
+    h = a[:, :, None, None] * h + jnp.einsum(
+        "bh,bhd,bn->bhdn", dt, xin.astype(jnp.float32), Bm.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhdn->bhd", Cm.astype(jnp.float32), h).astype(x.dtype)
+    y = y + p["D"].astype(x.dtype)[None, :, None] * xin
+    y = y.reshape(b, 1, di)
+    y = _gated_group_norm(p, y, z, cfg)
+    out = y @ p["out_proj"]
+    return out, {"h": h, "conv": new_prev.astype(cache["conv"].dtype)}

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, OptState, clip_by_global_norm
+from repro.optim.schedule import constant_lr, cosine_with_warmup
+
+__all__ = ["AdamW", "OptState", "clip_by_global_norm", "constant_lr", "cosine_with_warmup"]

@@ -1,0 +1,106 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments, no first
+moment.  Used for the giant MoE configs where full Adam state does not fit
+a v5e's 16 GB (DESIGN.md; EXPERIMENTS.md §Dry-run): state is O(rows+cols)
+per matrix instead of O(rows*cols).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FactoredSlot(NamedTuple):
+    vr: jax.Array  # mean of squares over the last dim   [..., rows]
+    vc: jax.Array  # mean of squares over the 2nd-to-last [..., cols]
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    slots: Any  # pytree: FactoredSlot for >=2D leaves, full v for 1D
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+
+    def _factored(self, p) -> bool:
+        return p.ndim >= 2
+
+    def init(self, params: Any) -> AdafactorState:
+        def slot(p):
+            if self._factored(p):
+                return FactoredSlot(
+                    vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                    vc=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                )
+            return jnp.zeros_like(p, dtype=jnp.float32)
+
+        return AdafactorState(step=jnp.zeros((), jnp.int32), slots=jax.tree.map(slot, params))
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads: Any, state: AdafactorState, params: Any):
+        from repro.optim.adamw import clip_by_global_norm
+
+        if self.grad_clip is not None:
+            grads = clip_by_global_norm(grads, self.grad_clip)
+        step = state.step + 1
+        lr = self._lr(step)
+        b2 = self.decay
+
+        def upd_factored(p, g, vr_in, vc_in):
+            """One (possibly layer-sliced) factored update. Never materializes
+            the full outer-product V: u = g * rsqrt(vr') * rsqrt(vc') * sqrt(rmean)
+            fuses into an elementwise chain (one fp32 temp the size of g)."""
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            vr = b2 * vr_in + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * vc_in + (1 - b2) * jnp.mean(g2, axis=-2)
+            rmean = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), self.eps)
+            u = (
+                g
+                * jax.lax.rsqrt(jnp.maximum(vr, self.eps))[..., :, None]
+                * jax.lax.rsqrt(jnp.maximum(vc, self.eps))[..., None, :]
+                * jnp.sqrt(rmean)[..., None]
+            )
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc
+
+        def upd(p, g, slot):
+            if self._factored(p):
+                # NOTE: measured (EXPERIMENTS.md §Perf): a lax.map over the
+                # leading stacked dim COSTS ~4x leaf size in scan buffers,
+                # while the direct elementwise chain fuses to zero temps.
+                new_p, vr, vc = upd_factored(p, g, slot.vr, slot.vc)
+                return new_p, FactoredSlot(vr=vr, vc=vc)
+            g32 = g.astype(jnp.float32)
+            v = b2 * slot + (1 - b2) * (jnp.square(g32) + self.eps)
+            u = g32 * jax.lax.rsqrt(v + self.eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state.slots)
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_slots = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return new_params, AdafactorState(step=step, slots=new_slots)

@@ -1,0 +1,11 @@
+from repro.serve.engine import EnsembleServer, LiveMember, ServeResult
+from repro.serve.generate import greedy_generate, greedy_generate_encdec, prompt_positions
+
+__all__ = [
+    "EnsembleServer",
+    "LiveMember",
+    "ServeResult",
+    "greedy_generate",
+    "greedy_generate_encdec",
+    "prompt_positions",
+]

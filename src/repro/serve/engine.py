@@ -1,0 +1,146 @@
+"""MODI ensemble serving engine (paper §2.3 end-to-end).
+
+Pipeline per batch of queries:
+    1. predictor scores the query for every pool member  (r_hat [B, N])
+    2. Kaplan costs c_i · t_i(q) per member              (costs [B, N])
+    3. selection policy (MODI = ε-constrained knapsack)  (mask  [B, N])
+    4. selected members generate responses — live tiny JAX LMs or the
+       behavioral simulator (DESIGN.md §3)
+    5. GEN-FUSER fuses the selected responses into the final answer
+    6. cost accounting: realized FLOPs vs the full-ensemble (LLM-BLENDER)
+
+The engine is policy-agnostic: every baseline in ``repro.core.selector``
+plugs into the same pipeline, which is how the Table-1 benchmark runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fusion import build_fusion_batch
+from repro.core.predictor import QualityPredictor
+from repro.core.selector import SelectionPolicy, realized_cost_fraction
+from repro.data.mixinstruct import (
+    PoolMemberSpec,
+    Record,
+    member_response,
+    query_cost_matrix,
+)
+from repro.data.tokenizer import TOKENIZER
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM
+from repro.serve.generate import greedy_generate, greedy_generate_encdec
+
+
+@dataclasses.dataclass
+class LiveMember:
+    spec: PoolMemberSpec
+    model: DecoderLM
+    params: dict
+
+
+@dataclasses.dataclass
+class ServeResult:
+    responses: List[str]
+    mask: np.ndarray  # [B, N] selections
+    cost_fraction: np.ndarray  # [B] realized / full-ensemble cost
+    member_responses: List[List[Optional[str]]]  # [B][N] (None if unselected)
+    predicted_quality: np.ndarray  # [B, N]
+
+
+class EnsembleServer:
+    def __init__(
+        self,
+        pool: Sequence[PoolMemberSpec],
+        policy: SelectionPolicy,
+        predictor: QualityPredictor,
+        predictor_params: dict,
+        fuser: EncDecLM,
+        fuser_params: dict,
+        live_members: Optional[Sequence[LiveMember]] = None,
+        max_query_len: int = 96,
+        max_fusion_len: int = 512,
+        max_new_tokens: int = 32,
+        sim_seed: int = 0,
+    ):
+        self.pool = list(pool)
+        self.policy = policy
+        self.predictor = predictor
+        self.predictor_params = predictor_params
+        self.fuser = fuser
+        self.fuser_params = fuser_params
+        self.live_members = list(live_members) if live_members else None
+        self.max_query_len = max_query_len
+        self.max_fusion_len = max_fusion_len
+        self.max_new_tokens = max_new_tokens
+        self._sim_rng = np.random.default_rng(sim_seed)
+        self.stats: Dict[str, float] = {"queries": 0, "flops": 0.0, "full_flops": 0.0}
+
+    # ------------------------------------------------------------------
+    def predict_quality(self, queries: List[str]) -> np.ndarray:
+        toks = TOKENIZER.batch_encode(queries, self.max_query_len, cls=True)
+        return np.asarray(self.predictor.apply(self.predictor_params, jnp.asarray(toks)))
+
+    # ------------------------------------------------------------------
+    def _generate_member(self, member_idx: int, queries: List[str], recs: List[Record]) -> List[str]:
+        if self.live_members is None:
+            spec = self.pool[member_idx]
+            return [member_response(spec, r, self._sim_rng) for r in recs]
+        lm = self.live_members[member_idx]
+        prompts = [
+            TOKENIZER.encode(q, bos=True) + [TOKENIZER.sep_id] for q in queries
+        ]
+        batch = TOKENIZER.pad_batch(prompts, self.max_query_len)
+        out = greedy_generate(lm.model, lm.params, batch, max_new=self.max_new_tokens)
+        return [TOKENIZER.decode(row) for row in out]
+
+    # ------------------------------------------------------------------
+    def serve(self, records: List[Record]) -> ServeResult:
+        queries = [r.query for r in records]
+        b, n = len(records), len(self.pool)
+        r_hat = self.predict_quality(queries)
+        costs = query_cost_matrix(self.pool, records)
+        mask = np.asarray(self.policy.select(jnp.asarray(r_hat), jnp.asarray(costs)))
+
+        # generate member responses (batched per member over its selected rows)
+        member_out: List[List[Optional[str]]] = [[None] * n for _ in range(b)]
+        for j in range(n):
+            rows = [i for i in range(b) if mask[i, j]]
+            if not rows:
+                continue
+            outs = self._generate_member(j, [queries[i] for i in rows], [records[i] for i in rows])
+            for i, o in zip(rows, outs):
+                member_out[i][j] = o
+
+        # fuse
+        resp_tokens = np.full((b, n, 64), TOKENIZER.pad_id, np.int32)
+        for i in range(b):
+            for j in range(n):
+                if member_out[i][j] is not None:
+                    enc = TOKENIZER.encode(member_out[i][j])[:64]
+                    resp_tokens[i, j, : len(enc)] = enc
+        q_tokens = TOKENIZER.batch_encode(queries, self.max_query_len)
+        fuse_in = build_fusion_batch(
+            q_tokens, resp_tokens, mask, TOKENIZER.sep_id, self.max_fusion_len, TOKENIZER.pad_id
+        )
+        fused = greedy_generate_encdec(
+            self.fuser, self.fuser_params, fuse_in, max_new=self.max_new_tokens
+        )
+        responses = [TOKENIZER.decode(row) for row in fused]
+
+        frac = np.asarray(realized_cost_fraction(jnp.asarray(mask), jnp.asarray(costs)))
+        self.stats["queries"] += b
+        self.stats["flops"] += float(np.sum(np.where(mask, costs, 0.0)))
+        self.stats["full_flops"] += float(np.sum(costs))
+        return ServeResult(
+            responses=responses,
+            mask=mask,
+            cost_fraction=frac,
+            member_responses=member_out,
+            predicted_quality=r_hat,
+        )

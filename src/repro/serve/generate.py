@@ -1,0 +1,127 @@
+"""Greedy generation for decoder-only and encoder-decoder models.
+
+Prompts are right-padded; padded slots get position -1 so they are masked
+out of attention and dropped from the KV cache (see models.attention).
+The decode loop is a single jitted ``lax.scan`` over ``max_new`` steps.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import TOKENIZER
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM
+
+
+def prompt_positions(tokens: jax.Array, pad_id: int) -> Tuple[jax.Array, jax.Array]:
+    """Positions [B,S] with -1 at pads, plus per-row lengths [B]."""
+    real = tokens != pad_id
+    lengths = jnp.sum(real, axis=1).astype(jnp.int32)
+    pos = jnp.cumsum(real.astype(jnp.int32), axis=1) - 1
+    return jnp.where(real, pos, -1), lengths
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
+def _generate_decoder(
+    model: DecoderLM,
+    params: dict,
+    prompt: jax.Array,  # [B, Sp] right-padded
+    max_new: int,
+    pad_id: int,
+    eos_id: int,
+) -> jax.Array:
+    b, sp = prompt.shape
+    positions, lengths = prompt_positions(prompt, pad_id)
+    cache = model.init_cache(b, sp + max_new + model.cfg.frontend_tokens)
+    # Full-forward prefill: right-padded prompts need the logits at each
+    # row's last *real* token (not the last column), so gather per row.
+    logits_all, cache, _, _ = model.forward(params, prompt, cache=cache, positions=positions)
+    off = model.cfg.frontend_tokens
+    gather_idx = (off + lengths - 1)[:, None, None]
+    last = jnp.take_along_axis(
+        logits_all, jnp.broadcast_to(gather_idx, (b, 1, logits_all.shape[-1])), axis=1
+    )
+    tok0 = jnp.argmax(last[:, 0], axis=-1).astype(jnp.int32)
+
+    def step(carry, _):
+        tok, pos, cache, done = carry
+        out_tok = jnp.where(done, pad_id, tok)
+        logits, cache = model.decode_step(params, tok[:, None], pos, cache)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        done_next = done | (tok == eos_id)
+        nxt = jnp.where(done_next, pad_id, nxt)
+        return (nxt, pos + 1, cache, done_next), out_tok
+
+    pos0 = lengths + off
+    done0 = tok0 == eos_id
+    (_, _, _, _), toks = jax.lax.scan(
+        step, (tok0, pos0, cache, done0), None, length=max_new
+    )
+    return toks.swapaxes(0, 1)  # [B, max_new]
+
+
+def greedy_generate(
+    model: DecoderLM,
+    params: dict,
+    prompt: np.ndarray,
+    max_new: int = 32,
+    pad_id: int = TOKENIZER.pad_id,
+    eos_id: int = TOKENIZER.eos_id,
+) -> np.ndarray:
+    return np.asarray(
+        _generate_decoder(model, params, jnp.asarray(prompt, jnp.int32), max_new, pad_id, eos_id)
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
+def _generate_encdec(
+    model: EncDecLM,
+    params: dict,
+    enc_tokens: jax.Array,  # [B, Se]
+    max_new: int,
+    pad_id: int,
+    eos_id: int,
+    bos_id: int,
+) -> jax.Array:
+    b = enc_tokens.shape[0]
+    cache = model.init_cache(b, max_new + 2)
+    bos = jnp.full((b, 1), bos_id, jnp.int32)
+    logits, cache = model.prefill(params, bos, cache, enc_tokens=enc_tokens)
+    tok0 = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+
+    def step(carry, i):
+        tok, cache, done = carry
+        out_tok = jnp.where(done, pad_id, tok)
+        pos = jnp.full((b,), 0, jnp.int32) + i + 1
+        logits, cache = model.decode_step(params, tok[:, None], pos, cache)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        done_next = done | (tok == eos_id)
+        nxt = jnp.where(done_next, pad_id, nxt)
+        return (nxt, cache, done_next), out_tok
+
+    (_, _, _), toks = jax.lax.scan(
+        step, (tok0, cache, tok0 == eos_id), jnp.arange(max_new)
+    )
+    return toks.swapaxes(0, 1)
+
+
+def greedy_generate_encdec(
+    model: EncDecLM,
+    params: dict,
+    enc_tokens: np.ndarray,
+    max_new: int = 32,
+    pad_id: int = TOKENIZER.pad_id,
+    eos_id: int = TOKENIZER.eos_id,
+    bos_id: int = TOKENIZER.bos_id,
+) -> np.ndarray:
+    return np.asarray(
+        _generate_encdec(
+            model, params, jnp.asarray(enc_tokens, jnp.int32), max_new, pad_id, eos_id, bos_id
+        )
+    )

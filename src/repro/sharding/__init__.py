@@ -1,0 +1,17 @@
+from repro.sharding.api import (
+    AxisRules,
+    axis_rules,
+    current_rules,
+    logical_constraint,
+    logical_sharding,
+    param_spec,
+)
+
+__all__ = [
+    "AxisRules",
+    "axis_rules",
+    "current_rules",
+    "logical_constraint",
+    "logical_sharding",
+    "param_spec",
+]

@@ -1,0 +1,156 @@
+"""Parameter sharding inference (GSPMD/FSDP layout rules).
+
+Walks a parameter pytree and assigns every leaf a PartitionSpec from
+name/context rules:
+
+* tensor-parallel dims (heads, mlp hidden, experts, vocab) -> ``model``;
+* one remaining large dim -> ``fsdp`` (= ("pod","data")) — ZeRO-3-style
+  resting shards, gathered just-in-time by GSPMD (or explicitly inside the
+  MoE shard_map);
+* small leaves (norms, biases, anything < REPLICATE_BELOW elems) replicate;
+* stacked per-layer leaves (under a scanned segment) get a leading None.
+
+Every candidate dim is divisibility-checked against the mesh axes it would
+occupy; non-divisible annotations are dropped rather than padded.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.api import AxisRules
+
+REPLICATE_BELOW = 1 << 20  # leaves smaller than 1M elements replicate
+
+_SEG_KEYS = {"segs", "blocks", "dec_segs", "enc_segs"}
+_ATTN_PARENTS = {"attn", "self_attn", "cross"}
+_MLP_PARENTS = {"mlp", "shared", "dense"}
+
+# name -> logical axes, per context
+_ATTN_AXES = {
+    "wq": ("fsdp", "heads", None),
+    "wk": ("fsdp", "kv_heads", None),
+    "wv": ("fsdp", "kv_heads", None),
+    "wo": ("heads", None, "fsdp"),
+    "bq": ("heads", None),
+    "bk": ("kv_heads", None),
+    "bv": ("kv_heads", None),
+    # MLA
+    "wdq": ("fsdp", None),
+    "wdkv": ("fsdp", None),
+    "wkr": ("fsdp", None),
+    "wuq": (None, "heads", None),
+    "wuk": (None, "heads", None),
+    "wuv": (None, "heads", None),
+}
+_MLP_AXES = {"wi": ("fsdp", "mlp"), "wg": ("fsdp", "mlp"), "wo": ("mlp", "fsdp")}
+_EXPERT_AXES = {
+    "wi": ("experts", "expert_fsdp", None),
+    "wg": ("experts", "expert_fsdp", None),
+    "wo": ("experts", "expert_fsdp", None),
+}
+_SSM_AXES = {
+    "in_proj": ("fsdp", "mlp"),
+    "conv_w": (None, "mlp"),
+    "conv_b": ("mlp",),
+    "out_proj": ("mlp", "fsdp"),
+}
+_TOP_AXES = {
+    "embed": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "frontend_proj": ("fsdp", None),
+    "proj": ("fsdp", None),  # MTP merge projection
+}
+
+
+def _path_names(path) -> list:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+    return names
+
+
+def _logical_axes_for(path_names: list, shape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    name = path_names[-1] if path_names else ""
+    parents = set(path_names[:-1])
+    if "experts" in parents and name in _EXPERT_AXES:
+        return _EXPERT_AXES[name]
+    if parents & _ATTN_PARENTS and name in _ATTN_AXES:
+        return _ATTN_AXES[name]
+    if parents & _MLP_PARENTS and name in _MLP_AXES:
+        return _MLP_AXES[name]
+    if "ssm" in parents and name in _SSM_AXES:
+        return _SSM_AXES[name]
+    if name in _TOP_AXES:
+        return _TOP_AXES[name]
+    return (None,) * len(shape)
+
+
+def _check_divisible(spec_axes, shape, rules: AxisRules) -> P:
+    parts = []
+    used: set = set()
+    for dim, logical in zip(shape, spec_axes):
+        if logical is None:
+            parts.append(None)
+            continue
+        mesh_axes = rules.rules.get(logical)
+        if mesh_axes is None:
+            parts.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        # drop trailing axes until divisible
+        while mesh_axes:
+            prod = int(np.prod([rules.mesh.shape[a] for a in mesh_axes]))
+            if dim % prod == 0:
+                break
+            mesh_axes = mesh_axes[:-1]
+        if not mesh_axes:
+            parts.append(None)
+            continue
+        used.update(mesh_axes)
+        parts.append(mesh_axes[0] if len(mesh_axes) == 1 else tuple(mesh_axes))
+    return P(*parts)
+
+
+def infer_param_specs(params: Any, rules: AxisRules) -> Any:
+    """PartitionSpec pytree matching ``params``."""
+
+    def leaf_spec(path, leaf):
+        shape = np.shape(leaf)
+        if int(np.prod(shape) or 1) < REPLICATE_BELOW:
+            return P()
+        names = _path_names(path)
+        stacked = bool(set(names) & _SEG_KEYS)
+        if stacked and len(shape) >= 1:
+            axes = _logical_axes_for(names, shape[1:])
+            axes = (None,) + tuple(axes)
+        else:
+            axes = _logical_axes_for(names, shape)
+        if len(axes) != len(shape):
+            axes = tuple(axes[: len(shape)]) + (None,) * (len(shape) - len(axes))
+        return _check_divisible(axes, shape, rules)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(params: Any, rules: AxisRules) -> Any:
+    specs = infer_param_specs(params, rules)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def spec_drop_dim(spec: P, rank: int, dim: int) -> P:
+    """Spec for a reduced tensor missing dim ``dim`` of a rank-``rank``
+    tensor (Adafactor factored states)."""
+    parts = list(spec) + [None] * (rank - len(spec))
+    del parts[dim % rank]
+    return P(*parts)

@@ -1,0 +1,4 @@
+from repro.train import checkpoint
+from repro.train.trainer import TrainResult, repeat_batches, train
+
+__all__ = ["checkpoint", "TrainResult", "repeat_batches", "train"]

@@ -1,0 +1,44 @@
+"""Dependency-free checkpointing: pytree -> .npz + tree-structure JSON."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree: Any) -> None:
+    """Save a pytree of arrays to ``path`` (.npz) + ``path + .tree.json``."""
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **arrays)
+    with open(path + ".tree.json", "w") as f:
+        json.dump({"treedef": str(treedef), "n": len(leaves)}, f)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz" if os.path.exists(path + ".npz") else path
+    data = np.load(path)
+    leaves, treedef = _flatten(like)
+    loaded = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for got, want in zip(loaded, leaves):
+        if got.shape != want.shape:
+            raise ValueError(f"shape mismatch: {got.shape} vs {want.shape}")
+    import jax.numpy as jnp
+
+    return jax.tree.unflatten(treedef, [jnp.asarray(g, x.dtype) for g, x in zip(loaded, leaves)])
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(path) or os.path.exists(path + ".npz")

@@ -1,0 +1,80 @@
+"""Generic training loop used by every trainable component (pool members,
+BARTScore scorer, GEN-FUSER, MODI predictor)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamW, OptState
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    opt_state: OptState
+    history: list
+
+
+def train(
+    loss_fn: Callable,  # (params, batch, rng|None) -> (loss, metrics)
+    params: Any,
+    batches: Iterator[Dict[str, Any]],
+    steps: int,
+    optimizer: Optional[AdamW] = None,
+    rng: Optional[jax.Array] = None,
+    log_every: int = 50,
+    log_fn: Callable[[str], None] = print,
+    donate: bool = True,
+) -> TrainResult:
+    optimizer = optimizer or AdamW()
+    opt_state = optimizer.init(params)
+    use_rng = rng is not None
+
+    def step_fn(params, opt_state, batch, step_rng):
+        if use_rng:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, step_rng
+            )
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+    history = []
+    t0 = time.time()
+    it = iter(batches)
+    for step in range(steps):
+        try:
+            batch = next(it)
+        except StopIteration:
+            break
+        if use_rng:
+            rng, step_rng = jax.random.split(rng)
+        else:
+            step_rng = None
+        params, opt_state, metrics = jit_step(params, opt_state, batch, step_rng)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+            log_fn(f"  step {step:4d}  " + "  ".join(f"{k}={v:.4f}" for k, v in m.items()))
+    _ = time.time() - t0
+    return TrainResult(params=params, opt_state=opt_state, history=history)
+
+
+def repeat_batches(make_iter: Callable[[int], Iterable]) -> Iterator:
+    """Cycle a (re-seedable) batch iterator forever."""
+    epoch = 0
+    while True:
+        yielded = False
+        for b in make_iter(epoch):
+            yielded = True
+            yield b
+        epoch += 1
+        if not yielded:
+            return

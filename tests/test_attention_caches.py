@@ -1,0 +1,83 @@
+"""Attention cache-write semantics: the partition-friendly overlay prefill
+write (EXPERIMENTS.md §Perf A') must be exactly equivalent to the scatter
+path, and ring-buffer writes must wrap correctly."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.models.attention import (
+    _mask_bias,
+    _write_cache_bulk,
+    _write_cache_step,
+    init_cache,
+)
+
+
+def _mk_cache(cfg, b, slots):
+    return init_cache(cfg, b, slots, jnp.float32)
+
+
+def test_overlay_write_matches_scatter_semantics():
+    cfg = configs.get("smollm-360m").reduced(dtype="float32")
+    b, s, slots = 2, 6, 10
+    cache = _mk_cache(cfg, b, slots)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = jax.random.normal(jax.random.key(0), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.key(1), (b, s, kv, hd))
+    # right-padded: row 0 has 4 real tokens, row 1 has 6
+    positions = jnp.asarray([[0, 1, 2, 3, -1, -1], [0, 1, 2, 3, 4, 5]])
+    new = _write_cache_bulk(cache, {"k": k, "v": v}, positions, window=0)
+    # valid slots hold the values; padded + tail slots untouched (pos=-1)
+    np.testing.assert_array_equal(np.asarray(new["pos"][0]), [0, 1, 2, 3, -1, -1, -1, -1, -1, -1])
+    np.testing.assert_array_equal(np.asarray(new["pos"][1]), [0, 1, 2, 3, 4, 5, -1, -1, -1, -1])
+    np.testing.assert_allclose(np.asarray(new["k"][0, :4]), np.asarray(k[0, :4]))
+    assert float(jnp.abs(new["k"][0, 4:]).max()) == 0.0  # pads dropped
+
+
+def test_ring_buffer_wraps():
+    cfg = dataclasses.replace(configs.get("smollm-360m").reduced(dtype="float32"),
+                              sliding_window=4)
+    b, slots = 1, 4
+    cache = _mk_cache(cfg, b, slots)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    for t in range(7):
+        val = jnp.full((b, kv, hd), float(t))
+        cache = _write_cache_step(cache, {"k": val, "v": val}, jnp.asarray([t]), window=4)
+    # positions 3..6 live in slots 3,0,1,2
+    np.testing.assert_array_equal(np.asarray(cache["pos"][0]), [4, 5, 6, 3])
+    assert float(cache["k"][0, 0, 0, 0]) == 4.0
+
+
+def test_mask_bias_window_and_validity():
+    q_pos = jnp.asarray([[5]])
+    k_pos = jnp.asarray([[-1, 3, 4, 5, 6]])
+    bias = _mask_bias(q_pos, k_pos, window=0)[0, 0, 0]
+    assert (np.asarray(bias) < -1e20).tolist() == [True, False, False, False, True]
+    bias_w = _mask_bias(q_pos, k_pos, window=2)[0, 0, 0]
+    assert (np.asarray(bias_w) < -1e20).tolist() == [True, True, False, False, True]
+
+
+def test_prefill_then_decode_with_window_cache():
+    """Windowed prefill+decode stays consistent with stepwise decode."""
+    cfg = dataclasses.replace(configs.get("smollm-360m").reduced(dtype="float32"),
+                              sliding_window=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 1, 12
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    # stepwise decode from scratch
+    cache_a = model.init_cache(B, S + 4)
+    out_a = None
+    for t in range(S):
+        out_a, cache_a = model.decode_step(params, toks[:, t:t + 1],
+                                           jnp.asarray([t]), cache_a)
+    # prefill then nothing — last-token logits must match
+    cache_b = model.init_cache(B, S + 4)
+    logits_b, cache_b = model.prefill(params, toks, cache_b)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(logits_b), atol=2e-4)

@@ -1,0 +1,220 @@
+"""Paper-core behaviour tests: knapsack, ε-constraint, cost model,
+predictor, policies, metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EpsilonConstraint,
+    FullEnsemblePolicy,
+    GreedyRatioPolicy,
+    ModiPolicy,
+    RandomPolicy,
+    BestSinglePolicy,
+    HybridRouterPolicy,
+    build_predictor,
+    cost_model_from_config,
+    enumerate_pareto,
+    knapsack_reference,
+    knapsack_select,
+    pareto_sweep,
+    realized_cost_fraction,
+    select_under_budget,
+    shift_scores,
+)
+from repro import configs
+from repro.data import DEFAULT_POOL, generate_dataset, query_cost_matrix
+
+
+# ---------------------------------------------------------------------------
+# Knapsack (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 10),
+    budget=st.integers(4, 200),
+    seed=st.integers(0, 2**31 - 1),
+    q=st.integers(1, 4),
+)
+def test_knapsack_matches_paper_algorithm(n, budget, seed, q):
+    rng = np.random.default_rng(seed)
+    profits = rng.uniform(0.05, 4.0, (q, n)).astype(np.float32)
+    costs = rng.integers(1, budget + 20, (q, n)).astype(np.int32)
+    sel = np.asarray(knapsack_select(jnp.asarray(profits), jnp.asarray(costs), budget))
+    for qi in range(q):
+        ref = knapsack_reference(
+            [{"cost": int(costs[qi, i]), "target_score": float(profits[qi, i])}
+             for i in range(n)], budget)
+        ref_val = sum(m["target_score"] for m in ref)
+        got_val = float(profits[qi][sel[qi]].sum())
+        assert abs(ref_val - got_val) < 1e-4
+        assert int(costs[qi][sel[qi]].sum()) <= budget
+
+
+def test_shift_scores_eq4():
+    s = jnp.asarray([-3.2, -2.1, -4.0])
+    shifted, alpha = shift_scores(s)
+    assert alpha > 4.0  # Eq. 5: alpha > max|score|
+    assert bool(jnp.all(shifted > 0))
+    with pytest.raises(ValueError):
+        shift_scores(s, alpha=3.0)
+
+
+# ---------------------------------------------------------------------------
+# ε-constraint (Eq. 3)
+# ---------------------------------------------------------------------------
+
+
+def test_epsilon_budget_respected():
+    rng = np.random.default_rng(0)
+    quality = jnp.asarray(rng.uniform(-4, -2, (32, 8)), jnp.float32)
+    costs = jnp.asarray(rng.uniform(1e11, 5e12, (32, 8)), jnp.float32)
+    for frac in (0.1, 0.2, 0.5):
+        mask = select_under_budget(quality, costs, EpsilonConstraint(frac))
+        realized = realized_cost_fraction(mask, costs)
+        assert bool(jnp.all(realized <= frac + 1e-6)), f"budget violated at eps={frac}"
+
+
+def test_epsilon_monotone_in_budget():
+    """More budget never selects a worse (shifted-profit) solution."""
+    rng = np.random.default_rng(1)
+    quality = jnp.asarray(rng.uniform(-4, -2, (16, 8)), jnp.float32)
+    costs = jnp.asarray(rng.uniform(1e11, 5e12, (16, 8)), jnp.float32)
+    profits, _ = shift_scores(quality)
+    prev = None
+    for frac in (0.05, 0.1, 0.2, 0.4, 0.8):
+        mask = select_under_budget(quality, costs, EpsilonConstraint(frac))
+        val = jnp.sum(jnp.where(mask, profits, 0.0), axis=1)
+        if prev is not None:
+            assert bool(jnp.all(val >= prev - 1e-4))
+        prev = val
+
+
+def test_pareto_sweep_on_frontier():
+    """Every ε-sweep point is non-dominated among brute-force subsets."""
+    rng = np.random.default_rng(3)
+    quality = rng.uniform(-4.0, -2.0, 6).astype(np.float32)
+    costs = rng.uniform(1.0, 10.0, 6)
+    frontier = pareto_sweep(quality, costs, fractions=np.linspace(0.05, 1.0, 30), buckets=512)
+    shifted = np.asarray(shift_scores(jnp.asarray(quality))[0])
+    truth = enumerate_pareto(shifted, costs)  # (cost, profit, mask)
+    total = costs.sum()
+    for cf, q, mask in frontier:
+        if not mask.any():
+            continue
+        # no brute-force point strictly dominates (cheaper AND better)
+        for tc, tp, tm in truth:
+            if tc < cf * total - 1e-9:
+                assert tp <= q + 1e-3, (cf, q, tc, tp)
+
+
+# ---------------------------------------------------------------------------
+# Cost model (Eq. 1 / Kaplan)
+# ---------------------------------------------------------------------------
+
+
+def test_kaplan_cost_model():
+    cfg = configs.get("smollm-360m")
+    cm = cost_model_from_config(cfg)
+    # c_fwd = 2N + 2 n_layer n_ctx d_model
+    n_ctx = 100
+    expected = 2 * cfg.active_non_embedding_params() + 2 * cfg.num_layers * n_ctx * cfg.d_model
+    assert cm.flops_per_token(n_ctx) == pytest.approx(expected)
+    assert cm.query_cost(n_ctx, 10) == pytest.approx(10 * expected)
+
+
+def test_moe_cost_uses_active_params():
+    ds = configs.get("deepseek-v3-671b")
+    assert ds.active_non_embedding_params() < 0.1 * ds.non_embedding_params()
+    cm = cost_model_from_config(ds)
+    assert cm.params_active == ds.active_non_embedding_params()
+
+
+def test_pool_cost_matrix_shape_and_positivity():
+    recs = generate_dataset(5, seed=0)
+    costs = query_cost_matrix(DEFAULT_POOL, recs)
+    assert costs.shape == (5, 8)
+    assert (costs > 0).all()
+    # 13B member costs more than 7B member on every query
+    assert (costs[:, 1] > costs[:, 0]).all()
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+
+def _toy():
+    rng = np.random.default_rng(0)
+    quality = jnp.asarray(rng.uniform(-4, -2, (8, 8)), jnp.float32)
+    costs = jnp.asarray(rng.uniform(1e11, 5e12, (8, 8)), jnp.float32)
+    return quality, costs
+
+
+def test_policies_shapes_and_semantics():
+    quality, costs = _toy()
+    assert bool(jnp.all(FullEnsemblePolicy().select(quality, costs)))
+    assert bool(jnp.all(RandomPolicy(k=3).select(quality, costs).sum(1) == 3))
+    bs = BestSinglePolicy().select(quality, costs)
+    assert bool(jnp.all(bs.sum(1) == 1))
+    assert bool(jnp.all(jnp.argmax(quality, 1) == jnp.argmax(bs, 1)))
+    hr = HybridRouterPolicy(small_index=0, large_index=1).select(quality, costs)
+    assert bool(jnp.all(hr.sum(1) == 1))
+    gr = GreedyRatioPolicy(EpsilonConstraint(0.2)).select(quality, costs)
+    assert bool(jnp.all(realized_cost_fraction(gr, costs) <= 0.2 + 1e-6))
+
+
+def test_modi_at_least_greedy():
+    """Exact DP >= greedy ratio heuristic on shifted profit (always)."""
+    quality, costs = _toy()
+    profits, _ = shift_scores(quality)
+    eps = EpsilonConstraint(0.25)
+    m = ModiPolicy(eps).select(quality, costs)
+    g = GreedyRatioPolicy(eps).select(quality, costs)
+    vm = jnp.sum(jnp.where(m, profits, 0.0), 1)
+    vg = jnp.sum(jnp.where(g, profits, 0.0), 1)
+    assert bool(jnp.all(vm >= vg - 1e-4))
+
+
+# ---------------------------------------------------------------------------
+# Predictor (A.2)
+# ---------------------------------------------------------------------------
+
+
+def test_predictor_shapes_and_determinism():
+    pred = build_predictor(num_models=8)
+    p = pred.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (4, 24), 0, 512)
+    out1 = pred.apply(p, toks)
+    out2 = pred.apply(p, toks)
+    assert out1.shape == (4, 8)
+    assert bool(jnp.all(out1 == out2))  # eval mode: no dropout
+
+
+def test_predictor_learns_signal():
+    """A few steps of Huber/Adam training reduces loss on a fixed batch."""
+    pred = build_predictor(num_models=4)
+    p = pred.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (16, 24), 0, 512)
+    target = jax.random.normal(jax.random.key(2), (16, 4)) * 0.5 - 3.0
+    batch = {"tokens": toks, "scores": target}
+    from repro.optim import AdamW
+
+    opt = AdamW(learning_rate=3e-4, b1=0.9, b2=0.98, weight_decay=0.01)
+    state = opt.init(p)
+    loss0 = float(pred.loss(p, batch)[0])
+
+    @jax.jit
+    def step(p, state):
+        (l, _), g = jax.value_and_grad(pred.loss, has_aux=True)(p, batch)
+        p, state = opt.update(g, state, p)
+        return p, state, l
+
+    for _ in range(30):
+        p, state, l = step(p, state)
+    assert float(pred.loss(p, batch)[0]) < loss0 * 0.9

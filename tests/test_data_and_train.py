@@ -1,0 +1,157 @@
+"""Data pipeline, optimizer, trainer and checkpointing tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.data import (
+    DEFAULT_POOL,
+    DOMAIN_NAMES,
+    TOKENIZER,
+    generate_dataset,
+    lm_batches,
+    member_response,
+    predictor_batches,
+    scorer_batches,
+)
+from repro.models import build_model
+from repro.optim import AdamW, clip_by_global_norm, cosine_with_warmup
+from repro.optim.adafactor import Adafactor
+from repro.train import checkpoint, repeat_batches, train
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.text(max_size=80))
+def test_tokenizer_roundtrip(text):
+    ids = TOKENIZER.encode(text)
+    assert TOKENIZER.decode(ids) == text.encode("utf-8", errors="replace").decode("utf-8", errors="replace")
+    assert all(0 <= i < 256 for i in ids)
+
+
+def test_tokenizer_specials_and_padding():
+    ids = TOKENIZER.encode("hi", bos=True, eos=True)
+    assert ids[0] == TOKENIZER.bos_id and ids[-1] == TOKENIZER.eos_id
+    batch = TOKENIZER.pad_batch([[1, 2], [3]], 4)
+    assert batch.shape == (2, 4)
+    assert batch[1, 1] == TOKENIZER.pad_id
+
+
+# ---------------------------------------------------------------------------
+# Synthetic MixInstruct
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_deterministic_and_diverse():
+    a = generate_dataset(100, seed=0)
+    b = generate_dataset(100, seed=0)
+    assert [r.query for r in a] == [r.query for r in b]
+    assert len({r.domain for r in a}) == len(DOMAIN_NAMES)
+
+
+def test_no_member_dominates():
+    """The paper's premise: every member is best-in-pool on some domain."""
+    comp = np.array([m.competence for m in DEFAULT_POOL])
+    best = comp.argmax(axis=0)
+    assert len(set(best.tolist())) >= 5
+    for j in range(len(DEFAULT_POOL)):
+        assert (comp[j] < comp.max(axis=0)).any(), "a member dominates everywhere"
+
+
+def test_member_response_tracks_competence():
+    rng = np.random.default_rng(0)
+    recs = generate_dataset(300, seed=1)
+    strong = DEFAULT_POOL[1]  # vicuna: high competence on add (idx 4)
+    weak = DEFAULT_POOL[3]  # stablelm: low on add
+    add_recs = [r for r in recs if r.domain == "add"]
+    acc = {m.name: np.mean([member_response(m, r, rng) == r.reference for r in add_recs])
+           for m in (strong, weak)}
+    assert acc[strong.name] > acc[weak.name] + 0.2
+
+
+def test_batch_builders_shapes():
+    recs = generate_dataset(64, seed=0)
+    b = next(iter(lm_batches(recs, 8, 48)))
+    assert b["tokens"].shape == (8, 48) and b["loss_mask"].shape == (8, 48)
+    assert b["loss_mask"].max() == 1.0
+    sb = next(iter(scorer_batches(recs, DEFAULT_POOL, 4, 64, 24)))
+    assert sb["enc_tokens"].shape == (4, 64) and sb["dec_tokens"].shape == (4, 24)
+    pb = next(iter(predictor_batches(recs, np.zeros((64, 8), np.float32), 4, 32)))
+    assert pb["tokens"].shape == (4, 32) and pb["tokens"][0, 0] == TOKENIZER.cls_id
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+def _quad_params():
+    return {"w": jnp.asarray([1.0, -2.0, 3.0]), "b": jnp.asarray(0.5)}
+
+
+@pytest.mark.parametrize("opt", [AdamW(learning_rate=0.05), Adafactor(learning_rate=0.5)])
+def test_optimizers_minimize_quadratic(opt):
+    params = _quad_params()
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"])) + jnp.square(p["b"])
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_factored_state_is_small():
+    p = {"w": jnp.zeros((64, 128))}
+    st_ = Adafactor().init(p)
+    n = sum(x.size for x in jax.tree.leaves(st_.slots))
+    assert n == 64 + 128  # vr + vc, not 64*128
+
+
+def test_grad_clip():
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    clipped = clip_by_global_norm(g, 1.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule():
+    sched = cosine_with_warmup(1.0, warmup=10, total=100)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Trainer + checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_train_loop_reduces_loss_and_checkpoints(tmp_path):
+    cfg = configs.get("smollm-360m").reduced(dtype="float32", num_layers=2, d_model=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    recs = generate_dataset(256, seed=0)
+    res = train(
+        lambda p, b: model.loss(p, b), params,
+        repeat_batches(lambda ep: lm_batches(recs, 8, 48, seed=ep)),
+        steps=40, optimizer=AdamW(learning_rate=2e-3), log_every=20, log_fn=lambda s: None,
+    )
+    assert res.history[-1]["loss"] < res.history[0]["loss"]
+
+    path = os.path.join(tmp_path, "ckpt.npz")
+    checkpoint.save(path, res.params)
+    restored = checkpoint.restore(path, params)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,29 @@
+"""Smoke: the runnable examples execute end-to-end."""
+
+import subprocess
+import sys
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def _run(script):
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", script)],
+        env=ENV, capture_output=True, text=True, timeout=900, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_quickstart():
+    stdout = _run("quickstart.py")
+    assert "llm-blender" in stdout
+    assert "eps= 0.2" in stdout
+
+
+def test_pareto_sweep():
+    stdout = _run("pareto_sweep.py")
+    assert "brute-force frontier" in stdout
+    assert "eps-sweep frontier" in stdout

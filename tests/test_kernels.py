@@ -1,0 +1,205 @@
+"""Per-kernel validation: shape/dtype sweeps + property tests against the
+pure-jnp oracles (interpret=True executes kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.knapsack import knapsack_select
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import gqa_attention_ref
+from repro.kernels.knapsack import knapsack_select_pallas
+from repro.kernels.ssd_scan import ssd_scan
+from repro.models.ssm import ssd_chunked, ssd_reference
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (b, h, kv, sq, hd, causal, window, bq, bk, dtype)
+    (2, 4, 2, 64, 32, True, 0, 16, 16, jnp.float32),
+    (1, 8, 2, 96, 64, True, 0, 32, 32, jnp.float32),
+    (2, 2, 2, 37, 16, True, 0, 16, 16, jnp.float32),
+    (1, 4, 4, 64, 32, False, 0, 16, 16, jnp.float32),
+    (1, 4, 2, 64, 32, True, 24, 16, 16, jnp.float32),
+    (1, 4, 1, 48, 32, True, 0, 16, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_oracle(case):
+    b, h, kv, s, hd, causal, window, bq, bk, dtype = case
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, hd), dtype)
+    out = flash_attention(q, k, v, causal, window, bq, bk)
+    ref = gqa_attention_ref(q, k, v, causal, window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.integers(9, 80),
+    hd=st.sampled_from([8, 16, 32]),
+    group=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_property(s, hd, group, seed):
+    kv = 2
+    h = kv * group
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, h, s, hd))
+    k = jax.random.normal(ks[1], (1, kv, s, hd))
+    v = jax.random.normal(ks[2], (1, kv, s, hd))
+    out = flash_attention(q, k, v, True, 0, 16, 16)
+    ref = gqa_attention_ref(q, k, v, True, 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_row_convexity():
+    """Each output row is a convex combination of V rows (softmax property)."""
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 32, 16))
+    k = jax.random.normal(ks[1], (1, 2, 32, 16))
+    v = jnp.ones((1, 2, 32, 16))
+    out = flash_attention(q, k, v, True, 0, 16, 16)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 2, 4, 64, 32, 0, 32, jnp.float32),
+    (1, 4, 2, 100, 64, 0, 64, jnp.float32),
+    (2, 2, 5, 64, 32, 24, 32, jnp.float32),
+    (1, 1, 8, 128, 32, 0, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_matches_oracle(case):
+    b, kv, g, s, hd, window, bk, dtype = case
+    ks = jax.random.split(jax.random.key(0), 4)
+    q = jax.random.normal(ks[0], (b, kv, g, hd), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, hd), dtype)
+    pos = jax.random.permutation(ks[3], jnp.arange(s))[None].repeat(b, 0) - 5
+    cur = jnp.full((b,), s * 2 // 3, jnp.int32)
+    out = decode_attention(q, k, v, pos, cur, window, block_k=bk)
+    ref = decode_attention_ref(q, k, v, pos, cur, window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_decode_attention_ring_buffer_invariance():
+    """Permuting cache slots (with their positions) must not change output."""
+    ks = jax.random.split(jax.random.key(2), 4)
+    b, kv, g, s, hd = 1, 2, 2, 48, 16
+    q = jax.random.normal(ks[0], (b, kv, g, hd))
+    k = jax.random.normal(ks[1], (b, kv, s, hd))
+    v = jax.random.normal(ks[2], (b, kv, s, hd))
+    pos = jnp.arange(s)[None]
+    cur = jnp.array([30])
+    out1 = decode_attention(q, k, v, pos, cur, 0, block_k=16)
+    perm = jax.random.permutation(ks[3], jnp.arange(s))
+    out2 = decode_attention(q, k[:, :, perm], v[:, :, perm], pos[:, perm], cur, 0, block_k=16)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    (2, 64, 3, 16, 32, 16, jnp.float32),
+    (1, 50, 2, 8, 16, 16, jnp.float32),
+    (1, 128, 4, 32, 64, 32, jnp.float32),
+    (1, 64, 2, 16, 16, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_sequential(case):
+    b, s, nh, hd, n, chunk, dtype = case
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (b, s, nh, hd), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh))).astype(dtype)
+    a = jnp.exp(-jax.nn.softplus(jax.random.normal(ks[2], (b, s, nh)))).astype(dtype)
+    bm = jax.random.normal(ks[3], (b, s, n), dtype)
+    cm = jax.random.normal(ks[4], (b, s, n), dtype)
+    y, h = ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+    yr, hr = ssd_reference(x, dt, a, bm, cm)
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(h, np.float32), np.asarray(hr, np.float32), atol=tol, rtol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.integers(5, 70), chunk=st.sampled_from([8, 16]), seed=st.integers(0, 999))
+def test_ssd_chunk_invariance(s, chunk, seed):
+    """Kernel output is independent of chunk size and matches pure-jnp chunked."""
+    b, nh, hd, n = 1, 2, 8, 8
+    ks = jax.random.split(jax.random.key(seed), 5)
+    x = jax.random.normal(ks[0], (b, s, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    a = jnp.exp(-jax.nn.softplus(jax.random.normal(ks[2], (b, s, nh))))
+    bm = jax.random.normal(ks[3], (b, s, n))
+    cm = jax.random.normal(ks[4], (b, s, n))
+    y, h = ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+    yj, hj = ssd_chunked(x, dt, a, bm, cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yj), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hj), atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Knapsack
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q,n,budget", [(5, 8, 64), (16, 8, 256), (3, 16, 128)])
+def test_knapsack_kernel_matches_lax(q, n, budget):
+    rng = np.random.default_rng(q * 1000 + n)
+    profits = jnp.asarray(rng.uniform(0.1, 5.0, (q, n)), jnp.float32)
+    costs = jnp.asarray(rng.integers(1, budget // 2, (q, n)), jnp.int32)
+    a = knapsack_select_pallas(profits, costs, budget)
+    b = knapsack_select(profits, costs, budget)
+    va = jnp.sum(jnp.where(a, profits, 0), 1)
+    vb = jnp.sum(jnp.where(b, profits, 0), 1)
+    np.testing.assert_allclose(np.asarray(va), np.asarray(vb), rtol=1e-6)
+    assert bool(jnp.all(jnp.sum(jnp.where(a, costs, 0), 1) <= budget))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 10),
+    budget=st.integers(8, 128),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_knapsack_kernel_optimality(n, budget, seed):
+    """Kernel value == brute-force optimum; cost constraint holds."""
+    rng = np.random.default_rng(seed)
+    profits = rng.uniform(0.01, 3.0, (1, n)).astype(np.float32)
+    costs = rng.integers(1, budget + 10, (1, n)).astype(np.int32)
+    sel = np.asarray(knapsack_select_pallas(jnp.asarray(profits), jnp.asarray(costs), budget))[0]
+    best = 0.0
+    for mask in range(1 << n):
+        c = sum(int(costs[0, i]) for i in range(n) if mask >> i & 1)
+        if c <= budget:
+            best = max(best, sum(float(profits[0, i]) for i in range(n) if mask >> i & 1))
+    got = float(profits[0][sel].sum())
+    assert got <= best + 1e-5
+    assert got >= best - 1e-4
+    assert int(costs[0][sel].sum()) <= budget

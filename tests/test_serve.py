@@ -1,0 +1,84 @@
+"""Serving-engine integration tests (simulation pool; untrained or briefly
+trained components — behaviourial invariants, not quality)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import EpsilonConstraint, FullEnsemblePolicy, ModiPolicy, build_predictor
+from repro.data import DEFAULT_POOL, TOKENIZER, generate_dataset
+from repro.models import build_model
+from repro.serve import EnsembleServer, greedy_generate, greedy_generate_encdec
+from repro.serve.generate import prompt_positions
+
+
+@pytest.fixture(scope="module")
+def stack():
+    pred = build_predictor(num_models=len(DEFAULT_POOL))
+    pp = pred.init(jax.random.key(0))
+    fuser = build_model(configs.get("gen-fuser"))
+    fp = fuser.init(jax.random.key(1))
+    return pred, pp, fuser, fp
+
+
+def test_serve_respects_budget_and_pipeline(stack):
+    pred, pp, fuser, fp = stack
+    srv = EnsembleServer(DEFAULT_POOL, ModiPolicy(EpsilonConstraint(0.2)), pred, pp, fuser, fp)
+    recs = generate_dataset(6, seed=3)
+    res = srv.serve(recs)
+    assert res.mask.shape == (6, 8)
+    assert (res.cost_fraction <= 0.2 + 1e-6).all()
+    assert len(res.responses) == 6
+    # member responses exist exactly where selected
+    for i in range(6):
+        for j in range(8):
+            assert (res.member_responses[i][j] is not None) == bool(res.mask[i, j])
+    assert srv.stats["queries"] == 6
+    assert srv.stats["flops"] <= 0.2 * srv.stats["full_flops"] + 1e-6
+
+
+def test_full_ensemble_costs_everything(stack):
+    pred, pp, fuser, fp = stack
+    srv = EnsembleServer(DEFAULT_POOL, FullEnsemblePolicy(), pred, pp, fuser, fp)
+    res = srv.serve(generate_dataset(3, seed=4))
+    assert bool(res.mask.all())
+    assert np.allclose(res.cost_fraction, 1.0)
+
+
+def test_prompt_positions_padding():
+    toks = jnp.asarray([[5, 6, TOKENIZER.pad_id, TOKENIZER.pad_id], [1, 2, 3, 4]])
+    pos, lengths = prompt_positions(toks, TOKENIZER.pad_id)
+    assert pos.tolist() == [[0, 1, -1, -1], [0, 1, 2, 3]]
+    assert lengths.tolist() == [2, 4]
+
+
+def test_greedy_generate_stops_and_pads():
+    cfg = configs.get("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompts = TOKENIZER.pad_batch([[TOKENIZER.bos_id, 65, 66], [TOKENIZER.bos_id, 67]], 8)
+    out = greedy_generate(model, params, prompts, max_new=6)
+    assert out.shape == (2, 6)
+    assert out.dtype == np.int32
+
+
+def test_generate_padded_equals_unpadded():
+    """Right-padding a prompt must not change its generation."""
+    cfg = configs.get("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = [TOKENIZER.bos_id, 72, 101, 108, 108, 111]
+    a = greedy_generate(model, params, TOKENIZER.pad_batch([prompt], len(prompt)), max_new=5)
+    b = greedy_generate(model, params, TOKENIZER.pad_batch([prompt], len(prompt) + 7), max_new=5)
+    assert (a == b).all()
+
+
+def test_encdec_generate():
+    cfg = configs.get("gen-fuser")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    enc = TOKENIZER.pad_batch([TOKENIZER.encode("fuse this"), TOKENIZER.encode("and this")], 16)
+    out = greedy_generate_encdec(model, params, enc, max_new=5)
+    assert out.shape == (2, 5)

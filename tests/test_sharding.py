@@ -1,0 +1,101 @@
+"""Sharding rules + param-spec inference tests (no multi-device needed:
+these validate spec construction against a small host mesh)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs
+from repro.models import build_model
+from repro.sharding.api import AxisRules, axis_rules, current_rules, default_axis_rules, logical_constraint
+from repro.sharding.params import infer_param_specs, spec_drop_dim
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_axis_rules_resolution(mesh):
+    rules = default_axis_rules(mesh)
+    spec = rules.resolve(("batch", None, "heads"))
+    assert spec == P("data", None, "model")  # pod filtered out (absent)
+
+
+def test_axis_rules_dedup(mesh):
+    rules = AxisRules(mesh=mesh, rules={"a": "model", "b": "model"})
+    # same mesh axis cannot appear twice
+    assert rules.resolve(("a", "b")) == P("model", None)
+
+
+def test_rules_context(mesh):
+    assert current_rules() is None
+    with axis_rules(default_axis_rules(mesh)) as r:
+        assert current_rules() is r
+        x = jnp.ones((4, 4))
+        # constraint on 1-sized mesh is a no-op but must not error
+        logical_constraint(x, "batch", "heads")
+    assert current_rules() is None
+
+
+def test_param_spec_inference(mesh):
+    rules = default_axis_rules(mesh)
+    cfg = configs.get("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    specs = infer_param_specs(shapes, rules)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    # every leaf got a PartitionSpec
+    for path, spec in flat:
+        assert isinstance(spec, P)
+    # tiny model: everything replicates (below size threshold)
+    assert all(spec == P() for _, spec in flat)
+
+
+def test_param_spec_inference_large():
+    """Full-size config: key tensors get model/fsdp shards with leading
+    layer-stack dim unsharded; indivisible dims are dropped."""
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1, 1)
+    mesh = Mesh(dev, ("pod", "data", "model"))
+    rules = default_axis_rules(mesh)
+    cfg = configs.get("qwen2.5-32b")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    specs = infer_param_specs(shapes, rules)
+    segs = specs["segs"]["0"]
+    assert segs["attn"]["wq"][0] is None  # stacked layer dim
+    assert "model" in str(segs["attn"]["wq"])  # heads sharded
+    assert specs["embed"] == P("model", ("pod", "data"))
+    # bias [L, H, hd] small -> replicated
+    assert segs["attn"]["bq"] == P()
+
+
+def test_moe_expert_specs():
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1, 1)
+    mesh = Mesh(dev, ("pod", "data", "model"))
+    rules = default_axis_rules(mesh)
+    cfg = configs.get("deepseek-v3-671b")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    specs = infer_param_specs(shapes, rules)
+    wi = specs["segs"]["1"]["moe"]["experts"]["wi"]
+    assert wi[1] == "model" and wi[2] == ("pod", "data")  # experts x fsdp
+
+
+def test_spec_drop_dim():
+    s = P("model", ("pod", "data"), None)
+    assert spec_drop_dim(s, 3, -1) == P("model", ("pod", "data"))
+    assert spec_drop_dim(s, 3, -2) == P("model", None)
+
+
+def test_divisibility_dropping(mesh):
+    rules = AxisRules(mesh=Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model")),
+                      rules={"heads": "model"})
+    from repro.sharding.params import _check_divisible
+
+    # 15 heads % 1 shard == 0 here; fake a 16-wide mesh via rules on shape
+    spec = _check_divisible(("heads",), (15,), rules)
+    assert isinstance(spec, P)
