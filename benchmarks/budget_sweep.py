@@ -10,7 +10,7 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EpsilonConstraint, ModiPolicy, realized_cost_fraction
+from repro.core import make_policy, realized_cost_fraction
 from repro.data import DEFAULT_POOL, TOKENIZER, generate_dataset, pool_responses, query_cost_matrix
 from benchmarks.table1 import fuse, get_stack, score_texts
 
@@ -28,7 +28,7 @@ def run(n_test: int = 200, train_steps: int = 700,
     log(f"\nBudget sweep ({n_test} queries):")
     log(f"{'eps':>6} {'members':>8} {'cost':>6} {'BARTScore':>10}")
     for frac in fractions:
-        mask = np.asarray(ModiPolicy(EpsilonConstraint(float(frac))).select(
+        mask = np.asarray(make_policy("modi", budget=float(frac)).select(
             jnp.asarray(r_hat), jnp.asarray(costs)))
         fused = fuse(fuser, fuser_p, test, responses, mask)
         s = score_texts(scorer, scorer_p, test, fused).mean()

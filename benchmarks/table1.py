@@ -20,15 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import (
-    EpsilonConstraint,
-    FixedSinglePolicy,
-    FullEnsemblePolicy,
-    ModiPolicy,
-    RandomPolicy,
-    bartscore,
-    realized_cost_fraction,
-)
+from repro.core import bartscore, make_policy, realized_cost_fraction
 from repro.core.fusion import build_fusion_batch
 from repro.data import (
     DEFAULT_POOL,
@@ -116,7 +108,7 @@ def run(n_test: int = 400, train_steps: int = 700, budget: float = 0.2, log=prin
         results[name] = {"bartscore": float(s.mean()), "cost_frac": float((costs[:, j] / full_cost).mean())}
 
     # Random ensemble of 3 + fuse
-    rmask = np.asarray(RandomPolicy(k=3, seed=5).select(jnp.asarray(r_hat), jnp.asarray(costs)))
+    rmask = np.asarray(make_policy("random", k=3, seed=5).select(jnp.asarray(r_hat), jnp.asarray(costs)))
     fused = fuse(fuser, fuser_p, test, responses, rmask)
     s = score_texts(scorer, scorer_p, test, fused)
     results["Random"] = {"bartscore": float(s.mean()),
@@ -132,7 +124,7 @@ def run(n_test: int = 400, train_steps: int = 700, budget: float = 0.2, log=prin
     results["LLM-BLENDER"] = {"bartscore": float(s.mean()), "cost_frac": 1.0}  # invokes all N
 
     # MODI at `budget` x blender cost
-    mmask = np.asarray(ModiPolicy(EpsilonConstraint(budget)).select(jnp.asarray(r_hat), jnp.asarray(costs)))
+    mmask = np.asarray(make_policy("modi", budget=budget).select(jnp.asarray(r_hat), jnp.asarray(costs)))
     fused = fuse(fuser, fuser_p, test, responses, mmask)
     s = score_texts(scorer, scorer_p, test, fused)
     results["MODI"] = {"bartscore": float(s.mean()),

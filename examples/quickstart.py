@@ -10,13 +10,7 @@ frontier — no training required (uses oracle quality scores).
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    EpsilonConstraint,
-    ModiPolicy,
-    FullEnsemblePolicy,
-    GreedyRatioPolicy,
-    realized_cost_fraction,
-)
+from repro.core import make_policy, realized_cost_fraction
 from repro.data import DEFAULT_POOL, generate_dataset, query_cost_matrix
 
 # 1. queries + the paper's 8-member pool with Kaplan costs (Eq. 1)
@@ -40,7 +34,7 @@ from repro.core import shift_scores
 
 profits = np.asarray(shift_scores(jnp.asarray(quality))[0])
 for frac in (0.1, 0.2, 0.5, 1.0):
-    policy = ModiPolicy(EpsilonConstraint(fraction=frac))
+    policy = make_policy("modi", budget=frac)
     mask = np.asarray(policy.select(jnp.asarray(quality), jnp.asarray(costs)))
     best = np.where(mask, quality, -np.inf).max(1).mean()
     profit = np.where(mask, profits, 0).sum(1).mean()
@@ -50,8 +44,9 @@ for frac in (0.1, 0.2, 0.5, 1.0):
           f"best-member quality={best:.2f}  knapsack profit={profit:.2f}")
 
 # 4. versus baselines at the paper's operating point (20% of blender cost)
-eps = EpsilonConstraint(0.2)
-for policy in (ModiPolicy(eps), GreedyRatioPolicy(eps), FullEnsemblePolicy()):
+for policy in (make_policy("modi", budget=0.2),
+               make_policy("greedy-ratio", budget=0.2),
+               make_policy("llm-blender")):
     mask = np.asarray(policy.select(jnp.asarray(quality), jnp.asarray(costs)))
     best = np.where(mask, quality, -np.inf).max(1).mean()
     spent = float(realized_cost_fraction(jnp.asarray(mask), jnp.asarray(costs)).mean())

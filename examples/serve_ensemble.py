@@ -1,5 +1,7 @@
-"""Serve a batched request stream through the MODI engine and compare the
-paper's policy against every baseline at equal budget (paper §3).
+"""Serve a request stream through the MODI engine two ways — one offline
+batch call and one request at a time through the admission Scheduler —
+verify they produce identical fused responses, then compare the paper's
+policy against every baseline at equal budget (paper §3).
 
     PYTHONPATH=src python examples/serve_ensemble.py [--train-steps 200]
 """
@@ -8,18 +10,10 @@ import argparse
 
 import numpy as np
 
-from repro.core import (
-    BestSinglePolicy,
-    EpsilonConstraint,
-    FullEnsemblePolicy,
-    GreedyRatioPolicy,
-    HybridRouterPolicy,
-    ModiPolicy,
-    RandomPolicy,
-)
+from repro.core import make_policy
 from repro.data import DEFAULT_POOL, generate_dataset
 from repro.launch.serve import build_stack
-from repro.serve import EnsembleServer
+from repro.serve import EnsembleServer, Scheduler, requests_from_records
 
 
 def main():
@@ -30,17 +24,31 @@ def main():
     args = ap.parse_args()
 
     _, scorer, scorer_p, fuser, fuser_p, predictor, pred_p = build_stack(args.train_steps)
-    eps = EpsilonConstraint(args.budget)
     policies = [
-        ModiPolicy(eps),
-        GreedyRatioPolicy(eps),
-        RandomPolicy(k=3),
-        BestSinglePolicy(),
-        HybridRouterPolicy(small_index=7, large_index=1),
-        FullEnsemblePolicy(),
+        make_policy("modi", budget=args.budget),
+        make_policy("greedy-ratio", budget=args.budget),
+        make_policy("random", k=3),
+        make_policy("best-single"),
+        make_policy("hybrid-router", small_index=7, large_index=1),
+        make_policy("llm-blender"),
     ]
     batch = generate_dataset(args.n, seed=11)
     print(f"{args.n} queries, budget = {args.budget:.0%} of full-ensemble cost\n")
+
+    # 1. offline batch vs one-request-at-a-time through the Scheduler: the
+    #    engine's request path is deterministic, so the outputs must match.
+    server = EnsembleServer(DEFAULT_POOL, policies[0], predictor, pred_p, fuser, fuser_p)
+    offline = server.serve(batch)
+    scheduler = Scheduler(server, max_batch_size=4, max_wait_ticks=2)
+    futures = [scheduler.submit(req) for req in requests_from_records(batch)]
+    scheduler.flush()
+    online = [f.result() for f in futures]
+    assert [r.text for r in online] == offline.responses, "scheduler != batch path"
+    assert all((r.mask == offline.mask[i]).all() for i, r in enumerate(online))
+    print(f"scheduler path == batch path over {args.n} requests "
+          f"({scheduler.stats['dispatched_batches']} micro-batches)\n")
+
+    # 2. every baseline at equal budget through the same engine
     for policy in policies:
         server = EnsembleServer(DEFAULT_POOL, policy, predictor, pred_p, fuser, fuser_p)
         res = server.serve(batch)

@@ -19,7 +19,7 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.core import EpsilonConstraint, ModiPolicy
+from repro.core import make_policy
 from repro.data import DEFAULT_POOL, generate_dataset, lm_batches
 from repro.launch.serve import build_stack
 from repro.models import build_model
@@ -55,7 +55,7 @@ def main():
 
     # hybrid pool: first --members live, rest behavioral (documented in DESIGN.md)
     server = EnsembleServer(
-        DEFAULT_POOL, ModiPolicy(EpsilonConstraint(args.budget)),
+        DEFAULT_POOL, make_policy("modi", budget=args.budget),
         predictor, pred_p, fuser, fuser_p,
         live_members=None,  # selection/fusion path; member gen below shows live models
     )

@@ -16,8 +16,11 @@ from repro.core.selector import (
     GreedyRatioPolicy,
     HybridRouterPolicy,
     ModiPolicy,
+    PolicyRegistry,
     RandomPolicy,
     SelectionPolicy,
+    available_policies,
+    make_policy,
     realized_cost_fraction,
 )
 
@@ -30,4 +33,5 @@ __all__ = [
     "BestSinglePolicy", "FixedSinglePolicy", "FullEnsemblePolicy",
     "GreedyRatioPolicy", "HybridRouterPolicy", "ModiPolicy", "RandomPolicy",
     "SelectionPolicy", "realized_cost_fraction",
+    "PolicyRegistry", "make_policy", "available_policies",
 ]

@@ -46,6 +46,9 @@ def select_under_budget(
     profits, _ = shift_scores(quality)
     budget_flops = eps.fraction * jnp.sum(costs_flops, axis=1, keepdims=True)  # [Q,1]
     scale = budget_flops / eps.buckets
+    # a zero-cost row (empty/degenerate pool costs) would make scale 0 and
+    # NaN the whole mask; every member is free there, so any scale works
+    scale = jnp.where(scale > 0, scale, 1.0)
     int_costs = jnp.ceil(costs_flops / scale).astype(jnp.int32)
     int_costs = jnp.maximum(int_costs, 1)
     return knapsack_select(profits, int_costs, eps.buckets)

@@ -5,12 +5,17 @@ A *policy* maps per-query quality estimates and costs to a subset of the
 pool.  Generation and fusion of the selected models' responses happen in
 ``repro.serve.engine``; policies are pure selection logic so they can be
 unit-tested and benchmarked in isolation.
+
+Policies are also registered by name in a :class:`PolicyRegistry` so the
+serving engine, benchmarks, and CLI flags can construct any of them
+uniformly (``make_policy("modi", budget=0.2)``) — including per-request
+policy/budget selection in ``repro.serve``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -66,11 +71,29 @@ class RandomPolicy(SelectionPolicy):
     name: str = "random"
 
     def select(self, quality, costs):
-        q, n = jnp.asarray(quality).shape
-        rng = jax.random.key(self.seed)
-        scores = jax.random.uniform(rng, (q, n))
-        kth = jnp.sort(scores, axis=1)[:, n - self.k][:, None]
-        return scores >= kth
+        quality = jnp.asarray(quality)
+        q, n = quality.shape
+        # independent subkey per query, derived from a fingerprint of the
+        # query's quality and cost rows (not its batch position) so the draw
+        # is invariant to how requests are micro-batched; exact uint32
+        # arithmetic over the float bit patterns avoids the collisions a
+        # float32 sum would have
+        row = jnp.concatenate(
+            [jnp.asarray(quality, jnp.float32), jnp.asarray(costs, jnp.float32)],
+            axis=1,
+        )
+        bits = jax.lax.bitcast_convert_type(row, jnp.uint32)
+        mult = (jnp.arange(1, 2 * n + 1, dtype=jnp.uint32) * jnp.uint32(2654435761)
+                | jnp.uint32(1))
+        fp = jnp.sum(bits * mult, axis=1, dtype=jnp.uint32)
+        base = jax.random.key(self.seed)
+        keys = jax.vmap(lambda f: jax.random.fold_in(base, f))(fp)
+        scores = jax.vmap(lambda k: jax.random.uniform(k, (n,)))(keys)
+        # exactly-k top-k mask: `scores >= kth` over-selects on ties, so rank
+        # instead of thresholding
+        top = jnp.argsort(-scores, axis=1)[:, : self.k]
+        mask = jnp.zeros((q, n), bool)
+        return mask.at[jnp.arange(q)[:, None], top].set(True)
 
 
 @dataclasses.dataclass
@@ -145,6 +168,105 @@ class HybridRouterPolicy(SelectionPolicy):
 
 
 def realized_cost_fraction(mask: jax.Array, costs: jax.Array) -> jax.Array:
-    """Fraction of the full-ensemble (LLM-BLENDER) cost actually spent."""
+    """Fraction of the full-ensemble (LLM-BLENDER) cost actually spent.
+
+    Rows whose total cost is zero (empty/degenerate cost rows) report a
+    fraction of 0 rather than dividing by zero into NaN."""
     costs = jnp.asarray(costs, jnp.float32)
-    return jnp.sum(jnp.where(mask, costs, 0.0), axis=1) / jnp.sum(costs, axis=1)
+    spent = jnp.sum(jnp.where(mask, costs, 0.0), axis=1)
+    total = jnp.sum(costs, axis=1)
+    return jnp.where(total > 0, spent / jnp.where(total > 0, total, 1.0), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Policy registry: string-keyed construction of every built-in policy
+# ---------------------------------------------------------------------------
+
+
+class PolicyRegistry:
+    """String-keyed factory for selection policies.
+
+    Every factory accepts an optional ``budget`` kwarg (fraction of the
+    full-ensemble cost); budget-insensitive policies ignore it, so a
+    per-request budget override can be applied uniformly to any policy
+    name (``registry.make("random", budget=0.1)`` is valid and simply
+    selects k random members).
+    """
+
+    def __init__(self):
+        self._factories: Dict[str, Callable[..., SelectionPolicy]] = {}
+
+    def register(self, name: str, factory: Callable[..., SelectionPolicy]) -> None:
+        if name in self._factories:
+            raise ValueError(f"policy {name!r} already registered")
+        self._factories[name] = factory
+
+    def names(self) -> List[str]:
+        return sorted(self._factories)
+
+    def make(self, name: str, **kwargs) -> SelectionPolicy:
+        try:
+            factory = self._factories[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown policy {name!r}; available: {', '.join(self.names())}"
+            ) from None
+        return factory(**kwargs)
+
+
+def _eps(eps: Optional[EpsilonConstraint], budget: Optional[float], buckets: int) -> EpsilonConstraint:
+    if eps is not None:
+        return eps if budget is None else EpsilonConstraint(budget, eps.buckets)
+    return EpsilonConstraint(0.2 if budget is None else budget, buckets)
+
+
+def _make_modi(eps: Optional[EpsilonConstraint] = None, budget: Optional[float] = None,
+               buckets: int = 256) -> SelectionPolicy:
+    return ModiPolicy(_eps(eps, budget, buckets))
+
+
+def _make_greedy_ratio(eps: Optional[EpsilonConstraint] = None, budget: Optional[float] = None,
+                       buckets: int = 256) -> SelectionPolicy:
+    return GreedyRatioPolicy(_eps(eps, budget, buckets))
+
+
+def _make_full(budget: Optional[float] = None) -> SelectionPolicy:
+    return FullEnsemblePolicy()
+
+
+def _make_random(k: int = 3, seed: int = 0, budget: Optional[float] = None) -> SelectionPolicy:
+    return RandomPolicy(k=k, seed=seed)
+
+
+def _make_best_single(budget: Optional[float] = None) -> SelectionPolicy:
+    return BestSinglePolicy()
+
+
+def _make_single(index: int = 0, budget: Optional[float] = None) -> SelectionPolicy:
+    return FixedSinglePolicy(index=index)
+
+
+def _make_hybrid_router(small_index: int = 0, large_index: int = 1, threshold: float = 0.0,
+                        budget: Optional[float] = None) -> SelectionPolicy:
+    return HybridRouterPolicy(small_index=small_index, large_index=large_index,
+                              threshold=threshold)
+
+
+DEFAULT_REGISTRY = PolicyRegistry()
+DEFAULT_REGISTRY.register("modi", _make_modi)
+DEFAULT_REGISTRY.register("greedy-ratio", _make_greedy_ratio)
+DEFAULT_REGISTRY.register("llm-blender", _make_full)
+DEFAULT_REGISTRY.register("random", _make_random)
+DEFAULT_REGISTRY.register("best-single", _make_best_single)
+DEFAULT_REGISTRY.register("single", _make_single)
+DEFAULT_REGISTRY.register("hybrid-router", _make_hybrid_router)
+
+
+def make_policy(name: str, **kwargs) -> SelectionPolicy:
+    """Construct a policy by registry name, e.g. ``make_policy("modi", budget=0.2)``."""
+    return DEFAULT_REGISTRY.make(name, **kwargs)
+
+
+def available_policies() -> List[str]:
+    """Names accepted by :func:`make_policy`."""
+    return DEFAULT_REGISTRY.names()

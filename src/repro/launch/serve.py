@@ -1,11 +1,16 @@
 """Serving driver: stand up the full MODI stack (predictor + knapsack +
-pool + GEN-FUSER) and serve a batch of MixInstruct-style queries.
+pool + GEN-FUSER) and serve MixInstruct-style queries.
 
-    PYTHONPATH=src python -m repro.launch.serve --budget 0.2 --n 16 [--train-steps 300]
+    PYTHONPATH=src python -m repro.launch.serve --budget 0.2 --n 16 \
+        [--policy modi] [--train-steps 300] [--online]
 
-With --train-steps > 0 the paper components (predictor, fuser, scorer) are
-trained in-process first; otherwise they run from random init (pipeline
-demo only).
+``build_stack`` trains (or randomly inits, for a pipeline demo) the
+scorer/fuser/predictor; ``main`` composes the layered serving stack:
+the policy is constructed by registry name (``repro.core.make_policy``),
+the ``EnsembleServer`` pairs it with a member backend, and ``--online``
+routes the queries one at a time through the admission
+``repro.serve.Scheduler`` instead of one offline batch — both paths
+produce identical responses.
 """
 
 from __future__ import annotations
@@ -16,12 +21,7 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.core import (
-    EpsilonConstraint,
-    ModiPolicy,
-    bartscore,
-    build_predictor,
-)
+from repro.core import bartscore, build_predictor, make_policy
 from repro.data import (
     DEFAULT_POOL,
     TOKENIZER,
@@ -34,7 +34,7 @@ from repro.data import (
 )
 from repro.models import build_model
 from repro.optim import AdamW
-from repro.serve import EnsembleServer
+from repro.serve import EnsembleServer, Scheduler, requests_from_records
 from repro.train import repeat_batches, train
 import jax.numpy as jnp
 
@@ -101,8 +101,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", type=float, default=0.2, help="epsilon as fraction of full-ensemble cost")
     ap.add_argument("--n", type=int, default=8, help="queries to serve")
+    ap.add_argument("--policy", type=str, default="modi", help="selection policy registry name")
     ap.add_argument("--train-steps", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--online", action="store_true",
+                    help="serve one request at a time through the admission Scheduler")
+    ap.add_argument("--max-batch-size", type=int, default=4, help="scheduler micro-batch size")
     args = ap.parse_args()
 
     recs, scorer, scorer_p, fuser, fuser_p, predictor, pred_p = build_stack(
@@ -110,16 +114,28 @@ def main():
     )
     server = EnsembleServer(
         DEFAULT_POOL,
-        ModiPolicy(EpsilonConstraint(args.budget)),
+        make_policy(args.policy, budget=args.budget),
         predictor, pred_p, fuser, fuser_p,
     )
     batch = generate_dataset(args.n, seed=args.seed + 999)
-    result = server.serve(batch)
-    for rec, resp, frac, row in zip(batch, result.responses, result.cost_fraction, result.mask):
+    if args.online:
+        scheduler = Scheduler(server, max_batch_size=args.max_batch_size)
+        futures = [scheduler.submit(req) for req in requests_from_records(batch)]
+        scheduler.flush()
+        out = [f.result() for f in futures]
+        responses = [r.text for r in out]
+        fractions = [r.cost_fraction for r in out]
+        masks = [r.mask for r in out]
+        print(f"scheduler: {scheduler.stats}")
+    else:
+        result = server.serve(batch)
+        responses, fractions, masks = result.responses, result.cost_fraction, result.mask
+    for rec, resp, frac, row in zip(batch, responses, fractions, masks):
         members = [DEFAULT_POOL[j].name for j in range(len(row)) if row[j]]
-        print(f"\nQ: {rec.query}\n   ref: {rec.reference}\n   MODI({frac:.0%} cost, {members}): {resp!r}")
+        print(f"\nQ: {rec.query}\n   ref: {rec.reference}\n   "
+              f"{args.policy}({frac:.0%} cost, {members}): {resp!r}")
     print("\nstats:", server.stats,
-          f"\nmean cost fraction: {result.cost_fraction.mean():.3f} (budget {args.budget})")
+          f"\nmean cost fraction: {np.mean(fractions):.3f} (budget {args.budget})")
 
 
 if __name__ == "__main__":

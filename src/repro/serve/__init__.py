@@ -1,11 +1,22 @@
-from repro.serve.engine import EnsembleServer, LiveMember, ServeResult
+from repro.serve.api import EnsembleRequest, EnsembleResponse, requests_from_records
+from repro.serve.backends import LiveLMBackend, LiveMember, MemberBackend, SimBackend
+from repro.serve.engine import EnsembleServer, ServeResult
 from repro.serve.generate import greedy_generate, greedy_generate_encdec, prompt_positions
+from repro.serve.scheduler import ResponseFuture, Scheduler
 
 __all__ = [
+    "EnsembleRequest",
+    "EnsembleResponse",
     "EnsembleServer",
+    "LiveLMBackend",
     "LiveMember",
+    "MemberBackend",
+    "ResponseFuture",
+    "Scheduler",
     "ServeResult",
+    "SimBackend",
     "greedy_generate",
     "greedy_generate_encdec",
     "prompt_positions",
+    "requests_from_records",
 ]

@@ -1,0 +1,66 @@
+"""Typed request/response surface for the MODI serving stack.
+
+An :class:`EnsembleRequest` is one user query plus optional per-request
+knobs (budget override, policy name, generation length).  The engine
+answers with an :class:`EnsembleResponse` carrying the fused text, the
+per-member texts and selection mask, realized cost, predicted quality,
+and wall-clock timing — everything Table-1 style evaluation or an online
+caller needs, without reaching into engine internals.
+
+Requests are what the :class:`repro.serve.scheduler.Scheduler` coalesces
+into admission micro-batches; offline evaluation wraps its ``Record``
+list into requests and goes through the exact same path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.data.mixinstruct import DOMAIN_NAMES, Record
+
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleRequest:
+    """One query for the ensemble.
+
+    ``budget`` overrides the engine's ε-fraction for this request only;
+    ``policy`` (a :func:`repro.core.make_policy` name, with optional
+    ``policy_kwargs``) overrides the engine's default policy.  ``record``
+    carries ground truth for offline evaluation and the behavioural
+    simulator; online traffic leaves it ``None``.
+    """
+
+    query: str
+    budget: Optional[float] = None  # ε as fraction of full-ensemble cost
+    policy: Optional[str] = None  # registry name, e.g. "modi", "random"
+    policy_kwargs: Optional[Dict[str, Any]] = None
+    max_new_tokens: Optional[int] = None
+    record: Optional[Record] = None
+
+    def resolve_record(self) -> Record:
+        """The Record to cost/simulate against (synthesized for online queries)."""
+        if self.record is not None:
+            return self.record
+        return Record(query=self.query, reference="", domain=DOMAIN_NAMES[0], domain_id=0)
+
+
+@dataclasses.dataclass
+class EnsembleResponse:
+    """The engine's answer to one :class:`EnsembleRequest`."""
+
+    text: str  # GEN-FUSER output
+    member_texts: List[Optional[str]]  # [N], None where unselected
+    mask: np.ndarray  # [N] bool selection
+    realized_cost: float  # FLOPs actually spent on members
+    cost_fraction: float  # realized / full-ensemble cost
+    predicted_quality: np.ndarray  # [N] predictor scores r_hat
+    policy_name: str  # policy that produced the mask
+    timing: Dict[str, float]  # stage -> seconds (predict/select/generate/fuse/total)
+
+
+def requests_from_records(records: List[Record], **overrides) -> List[EnsembleRequest]:
+    """Wrap evaluation Records as requests (shared kwargs apply to all)."""
+    return [EnsembleRequest(query=r.query, record=r, **overrides) for r in records]

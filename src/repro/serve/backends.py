@@ -1,0 +1,106 @@
+"""Pluggable member backends: how a selected pool member produces text.
+
+The engine is backend-agnostic: anything satisfying the
+:class:`MemberBackend` protocol can serve a pool.  Two implementations
+ship with the repro:
+
+* :class:`SimBackend` — the behavioural simulator (DESIGN.md §3).  The
+  RNG is derived per ``(seed, member, query)``, so a member's response to
+  a query is identical whether it arrives in a 400-row offline batch or
+  as a single online request — the property the Scheduler-equivalence
+  guarantee rests on.
+* :class:`LiveLMBackend` — real tiny JAX decoder LMs via
+  ``greedy_generate``.
+
+This replaces the ``live_members is None`` branching that used to live
+inside ``EnsembleServer._generate_member``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import List, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.data.mixinstruct import PoolMemberSpec, Record, member_response
+from repro.data.tokenizer import TOKENIZER
+from repro.models.transformer import DecoderLM
+from repro.serve.generate import greedy_generate
+
+
+@runtime_checkable
+class MemberBackend(Protocol):
+    """Generates pool-member responses for a micro-batch of queries."""
+
+    def num_members(self) -> int:
+        """Size of the pool this backend serves."""
+        ...
+
+    def generate(
+        self,
+        member_idx: int,
+        records: Sequence[Record],
+        max_new_tokens: int,
+    ) -> List[str]:
+        """Member ``member_idx``'s response to each record, in order."""
+        ...
+
+
+def _query_rng(seed: int, member_idx: int, query: str) -> np.random.Generator:
+    # errors="replace" mirrors the tokenizer: unpaired surrogates in an
+    # online query must not crash the batch
+    digest = hashlib.blake2b(
+        query.encode("utf-8", errors="replace"), digest_size=8
+    ).digest()
+    return np.random.default_rng([seed, member_idx, int.from_bytes(digest, "little")])
+
+
+@dataclasses.dataclass
+class SimBackend:
+    """Behavioural simulator over a pool of :class:`PoolMemberSpec`."""
+
+    pool: Sequence[PoolMemberSpec]
+    seed: int = 0
+
+    def num_members(self) -> int:
+        return len(self.pool)
+
+    def generate(self, member_idx: int, records: Sequence[Record],
+                 max_new_tokens: int) -> List[str]:
+        spec = self.pool[member_idx]
+        return [
+            member_response(spec, r, _query_rng(self.seed, member_idx, r.query))
+            for r in records
+        ]
+
+
+@dataclasses.dataclass
+class LiveMember:
+    """A real (tiny) decoder LM standing in for one pool member."""
+
+    spec: PoolMemberSpec
+    model: DecoderLM
+    params: dict
+
+
+@dataclasses.dataclass
+class LiveLMBackend:
+    """Live JAX LMs: prompt = ``<bos> query <sep>``, greedy decode."""
+
+    members: Sequence[LiveMember]
+    max_query_len: int = 96
+
+    def num_members(self) -> int:
+        return len(self.members)
+
+    def generate(self, member_idx: int, records: Sequence[Record],
+                 max_new_tokens: int) -> List[str]:
+        lm = self.members[member_idx]
+        prompts = [
+            TOKENIZER.encode(r.query, bos=True) + [TOKENIZER.sep_id] for r in records
+        ]
+        batch = TOKENIZER.pad_batch(prompts, self.max_query_len)
+        out = greedy_generate(lm.model, lm.params, batch, max_new=max_new_tokens)
+        return [TOKENIZER.decode(row) for row in out]

@@ -1,51 +1,58 @@
 """MODI ensemble serving engine (paper §2.3 end-to-end).
 
-Pipeline per batch of queries:
+The engine is the composition point of four layers, each replaceable on
+its own:
+
+* request surface — :class:`repro.serve.api.EnsembleRequest` /
+  :class:`EnsembleResponse` (per-request budget, policy, generation length);
+* selection — any :class:`repro.core.SelectionPolicy`, constructed by
+  name through :func:`repro.core.make_policy`, resolved **per request**
+  and grouped so each distinct (policy, budget) runs one vectorized
+  ``select`` over its rows;
+* member generation — a :class:`repro.serve.backends.MemberBackend`
+  (behavioural simulator or live JAX LMs), batched per member over the
+  rows that selected it;
+* fusion — GEN-FUSER greedy decoding over the selected responses.
+
+Pipeline per admission micro-batch:
     1. predictor scores the query for every pool member  (r_hat [B, N])
     2. Kaplan costs c_i · t_i(q) per member              (costs [B, N])
-    3. selection policy (MODI = ε-constrained knapsack)  (mask  [B, N])
-    4. selected members generate responses — live tiny JAX LMs or the
-       behavioral simulator (DESIGN.md §3)
+    3. per-request policy (MODI = ε-constrained knapsack) (mask [B, N])
+    4. backend generates for the selected members
     5. GEN-FUSER fuses the selected responses into the final answer
     6. cost accounting: realized FLOPs vs the full-ensemble (LLM-BLENDER)
 
-The engine is policy-agnostic: every baseline in ``repro.core.selector``
-plugs into the same pipeline, which is how the Table-1 benchmark runs.
+``serve(records)`` is the offline batch entry point (Table-1 benchmark);
+``serve_requests(requests)`` is the request-level path the
+:class:`repro.serve.scheduler.Scheduler` drives for online traffic.
+Both produce identical outputs for identical inputs.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.epsilon import EpsilonConstraint
 from repro.core.fusion import build_fusion_batch
 from repro.core.predictor import QualityPredictor
-from repro.core.selector import SelectionPolicy, realized_cost_fraction
-from repro.data.mixinstruct import (
-    PoolMemberSpec,
-    Record,
-    member_response,
-    query_cost_matrix,
-)
+from repro.core.selector import SelectionPolicy, make_policy, realized_cost_fraction
+from repro.data.mixinstruct import PoolMemberSpec, Record, query_cost_matrix
 from repro.data.tokenizer import TOKENIZER
 from repro.models.encdec import EncDecLM
-from repro.models.transformer import DecoderLM
-from repro.serve.generate import greedy_generate, greedy_generate_encdec
-
-
-@dataclasses.dataclass
-class LiveMember:
-    spec: PoolMemberSpec
-    model: DecoderLM
-    params: dict
+from repro.serve.api import EnsembleRequest, EnsembleResponse, requests_from_records
+from repro.serve.backends import LiveLMBackend, LiveMember, MemberBackend, SimBackend
+from repro.serve.generate import greedy_generate_encdec
 
 
 @dataclasses.dataclass
 class ServeResult:
+    """Batch-level view of a served record list (offline evaluation)."""
+
     responses: List[str]
     mask: np.ndarray  # [B, N] selections
     cost_fraction: np.ndarray  # [B] realized / full-ensemble cost
@@ -63,6 +70,7 @@ class EnsembleServer:
         fuser: EncDecLM,
         fuser_params: dict,
         live_members: Optional[Sequence[LiveMember]] = None,
+        backend: Optional[MemberBackend] = None,
         max_query_len: int = 96,
         max_fusion_len: int = 512,
         max_new_tokens: int = 32,
@@ -74,12 +82,23 @@ class EnsembleServer:
         self.predictor_params = predictor_params
         self.fuser = fuser
         self.fuser_params = fuser_params
-        self.live_members = list(live_members) if live_members else None
+        if backend is None:
+            if live_members is not None:
+                backend = LiveLMBackend(list(live_members), max_query_len=max_query_len)
+            else:
+                backend = SimBackend(self.pool, seed=sim_seed)
+        if backend.num_members() != len(self.pool):
+            raise ValueError(
+                f"backend serves {backend.num_members()} members but the pool "
+                f"has {len(self.pool)}"
+            )
+        self.backend = backend
         self.max_query_len = max_query_len
         self.max_fusion_len = max_fusion_len
         self.max_new_tokens = max_new_tokens
-        self._sim_rng = np.random.default_rng(sim_seed)
-        self.stats: Dict[str, float] = {"queries": 0, "flops": 0.0, "full_flops": 0.0}
+        self.stats: Dict[str, float] = {
+            "queries": 0, "batches": 0, "flops": 0.0, "full_flops": 0.0,
+        }
 
     # ------------------------------------------------------------------
     def predict_quality(self, queries: List[str]) -> np.ndarray:
@@ -87,37 +106,85 @@ class EnsembleServer:
         return np.asarray(self.predictor.apply(self.predictor_params, jnp.asarray(toks)))
 
     # ------------------------------------------------------------------
-    def _generate_member(self, member_idx: int, queries: List[str], recs: List[Record]) -> List[str]:
-        if self.live_members is None:
-            spec = self.pool[member_idx]
-            return [member_response(spec, r, self._sim_rng) for r in recs]
-        lm = self.live_members[member_idx]
-        prompts = [
-            TOKENIZER.encode(q, bos=True) + [TOKENIZER.sep_id] for q in queries
-        ]
-        batch = TOKENIZER.pad_batch(prompts, self.max_query_len)
-        out = greedy_generate(lm.model, lm.params, batch, max_new=self.max_new_tokens)
-        return [TOKENIZER.decode(row) for row in out]
+    def _policy_key(self, req: EnsembleRequest) -> Tuple:
+        """Hashable group key that fully determines the resolved policy.
+
+        A request naming a policy gets a fresh registry construction; a
+        request overriding only the budget (or other fields) keeps every
+        other knob of the server's configured policy instance."""
+        if req.policy is not None:
+            kwargs = dict(req.policy_kwargs or {})
+            if req.budget is not None:
+                kwargs["budget"] = req.budget
+            return (req.policy, tuple(sorted(kwargs.items())))
+        changes = dict(req.policy_kwargs or {})
+        if req.budget is not None:
+            eps = getattr(self.policy, "eps", None)
+            if isinstance(eps, EpsilonConstraint):
+                changes["eps"] = EpsilonConstraint(req.budget, eps.buckets)
+            # budget-insensitive default policy: the override is a no-op
+        if not changes:
+            return ("__default__",)
+        return ("__default__", tuple(sorted(changes.items())))
+
+    def _build_policy(self, key: Tuple) -> SelectionPolicy:
+        """Construct the policy a :meth:`_policy_key` describes (once per group)."""
+        if key == ("__default__",):
+            return self.policy
+        name, items = key
+        if name == "__default__":
+            return dataclasses.replace(self.policy, **dict(items))
+        return make_policy(name, **dict(items))
+
+    def _select(self, requests: List[EnsembleRequest], r_hat: np.ndarray,
+                costs: np.ndarray) -> Tuple[np.ndarray, List[str]]:
+        """[B, N] mask + per-request policy name, grouping rows that share a
+        resolved policy so each policy is built and vector-selected once."""
+        b, n = r_hat.shape
+        groups: Dict[Tuple, Tuple[SelectionPolicy, List[int]]] = {}
+        for i, req in enumerate(requests):
+            key = self._policy_key(req)
+            if key not in groups:
+                groups[key] = (self._build_policy(key), [])
+            groups[key][1].append(i)
+        mask = np.zeros((b, n), bool)
+        names = [""] * b
+        for policy, rows in groups.values():
+            sub = np.asarray(
+                policy.select(jnp.asarray(r_hat[rows]), jnp.asarray(costs[rows]))
+            )
+            for local, i in enumerate(rows):
+                mask[i] = sub[local]
+                names[i] = policy.name
+        return mask, names
 
     # ------------------------------------------------------------------
-    def serve(self, records: List[Record]) -> ServeResult:
-        queries = [r.query for r in records]
-        b, n = len(records), len(self.pool)
-        r_hat = self.predict_quality(queries)
-        costs = query_cost_matrix(self.pool, records)
-        mask = np.asarray(self.policy.select(jnp.asarray(r_hat), jnp.asarray(costs)))
+    def _generate_members(self, records: List[Record], mask: np.ndarray,
+                          max_new_per_row: List[int]) -> List[List[Optional[str]]]:
+        """[B][N] texts, batched per member over its selected rows.
 
-        # generate member responses (batched per member over its selected rows)
-        member_out: List[List[Optional[str]]] = [[None] * n for _ in range(b)]
+        Greedy decoding is prefix-stable and the tokenizer is byte-level,
+        so generating each member batch at the rows' max length and then
+        truncating EVERY row to its own limit equals generating each row
+        at its own limit — keeping the per-member batching.  Truncation is
+        unconditional: backends may over-generate (the simulator ignores
+        the limit entirely), and the cap must not depend on which other
+        rows share the micro-batch."""
+        b, n = mask.shape
+        out: List[List[Optional[str]]] = [[None] * n for _ in range(b)]
         for j in range(n):
             rows = [i for i in range(b) if mask[i, j]]
             if not rows:
                 continue
-            outs = self._generate_member(j, [queries[i] for i in rows], [records[i] for i in rows])
-            for i, o in zip(rows, outs):
-                member_out[i][j] = o
+            group_max = max(max_new_per_row[i] for i in rows)
+            texts = self.backend.generate(j, [records[i] for i in rows], group_max)
+            for i, text in zip(rows, texts):
+                out[i][j] = TOKENIZER.decode(TOKENIZER.encode(text)[: max_new_per_row[i]])
+        return out
 
-        # fuse
+    def _fuse(self, queries: List[str], member_out: List[List[Optional[str]]],
+              mask: np.ndarray, max_new: int) -> np.ndarray:
+        b, n = mask.shape
         resp_tokens = np.full((b, n, 64), TOKENIZER.pad_id, np.int32)
         for i in range(b):
             for j in range(n):
@@ -126,21 +193,89 @@ class EnsembleServer:
                     resp_tokens[i, j, : len(enc)] = enc
         q_tokens = TOKENIZER.batch_encode(queries, self.max_query_len)
         fuse_in = build_fusion_batch(
-            q_tokens, resp_tokens, mask, TOKENIZER.sep_id, self.max_fusion_len, TOKENIZER.pad_id
+            q_tokens, resp_tokens, mask, TOKENIZER.sep_id, self.max_fusion_len,
+            TOKENIZER.pad_id,
         )
-        fused = greedy_generate_encdec(
-            self.fuser, self.fuser_params, fuse_in, max_new=self.max_new_tokens
+        return greedy_generate_encdec(
+            self.fuser, self.fuser_params, fuse_in, max_new=max_new
         )
-        responses = [TOKENIZER.decode(row) for row in fused]
+
+    # ------------------------------------------------------------------
+    def serve_requests(self, requests: List[EnsembleRequest]) -> List[EnsembleResponse]:
+        """Serve one admission micro-batch of requests (the Scheduler's path)."""
+        if not requests:
+            return []
+        t_start = time.perf_counter()
+        records = [req.resolve_record() for req in requests]
+        queries = [r.query for r in records]
+
+        t0 = time.perf_counter()
+        r_hat = self.predict_quality(queries)
+        t_predict = time.perf_counter() - t0
+
+        costs = query_cost_matrix(self.pool, records)
+        t0 = time.perf_counter()
+        mask, policy_names = self._select(requests, r_hat, costs)
+        t_select = time.perf_counter() - t0
+
+        max_new_per_row = [
+            self.max_new_tokens if req.max_new_tokens is None else req.max_new_tokens
+            for req in requests
+        ]
+        t0 = time.perf_counter()
+        member_out = self._generate_members(records, mask, max_new_per_row)
+        t_generate = time.perf_counter() - t0
+
+        max_new = max(max_new_per_row)
+        t0 = time.perf_counter()
+        fused = self._fuse(queries, member_out, mask, max_new)
+        t_fuse = time.perf_counter() - t0
 
         frac = np.asarray(realized_cost_fraction(jnp.asarray(mask), jnp.asarray(costs)))
-        self.stats["queries"] += b
-        self.stats["flops"] += float(np.sum(np.where(mask, costs, 0.0)))
+        realized = np.sum(np.where(mask, costs, 0.0), axis=1)
+        total = time.perf_counter() - t_start
+        timing = {
+            "predict_s": t_predict, "select_s": t_select,
+            "generate_s": t_generate, "fuse_s": t_fuse, "total_s": total,
+        }
+
+        self.stats["queries"] += len(requests)
+        self.stats["batches"] += 1
+        self.stats["flops"] += float(realized.sum())
         self.stats["full_flops"] += float(np.sum(costs))
+
+        responses = []
+        for i, req in enumerate(requests):
+            row_new = max_new_per_row[i]
+            responses.append(EnsembleResponse(
+                text=TOKENIZER.decode(fused[i, :row_new]),
+                member_texts=member_out[i],
+                mask=mask[i],
+                realized_cost=float(realized[i]),
+                cost_fraction=float(frac[i]),
+                predicted_quality=r_hat[i],
+                policy_name=policy_names[i],
+                timing=dict(timing),
+            ))
+        return responses
+
+    # ------------------------------------------------------------------
+    def serve(self, records: List[Record]) -> ServeResult:
+        """Offline batch entry point: one micro-batch over all records."""
+        n = len(self.pool)
+        out = self.serve_requests(requests_from_records(records))
+        if not out:
+            return ServeResult(
+                responses=[],
+                mask=np.zeros((0, n), bool),
+                cost_fraction=np.zeros(0),
+                member_responses=[],
+                predicted_quality=np.zeros((0, n), np.float32),
+            )
         return ServeResult(
-            responses=responses,
-            mask=mask,
-            cost_fraction=frac,
-            member_responses=member_out,
-            predicted_quality=r_hat,
+            responses=[r.text for r in out],
+            mask=np.stack([r.mask for r in out]),
+            cost_fraction=np.asarray([r.cost_fraction for r in out]),
+            member_responses=[r.member_texts for r in out],
+            predicted_quality=np.stack([r.predicted_quality for r in out]),
         )

@@ -1,0 +1,138 @@
+"""Admission scheduler: coalesces individual requests into micro-batches.
+
+Online traffic arrives one :class:`EnsembleRequest` at a time;
+``submit()`` enqueues the request and returns a :class:`ResponseFuture`
+immediately.  A micro-batch is dispatched to the engine when
+
+* the queue reaches ``max_batch_size`` (dispatched inline from
+  ``submit``), or
+* a queued request has waited ``max_wait_ticks`` logical ticks
+  (``tick()`` is the caller's clock — one call per poll/step), or
+* the caller forces it (``flush()``, or ``ResponseFuture.result()`` on a
+  still-pending request).
+
+Because the engine's request path is deterministic per request (see
+``SimBackend``), a stream served one-at-a-time through the scheduler
+produces byte-identical fused responses to one big offline
+``EnsembleServer.serve`` call over the same records — the property
+``tests/test_serve_api.py`` pins down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.serve.api import EnsembleRequest, EnsembleResponse
+from repro.serve.engine import EnsembleServer
+
+
+class ResponseFuture:
+    """Handle for a submitted request; resolves when its batch is served."""
+
+    def __init__(self, scheduler: "Scheduler"):
+        self._scheduler = scheduler
+        self._response: Optional[EnsembleResponse] = None
+        self._error: Optional[BaseException] = None
+        self._done = False
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> EnsembleResponse:
+        """The response, flushing the scheduler if still queued.
+
+        Raises the engine's exception if this request's micro-batch failed."""
+        if not self._done:
+            self._scheduler.flush()
+        if self._error is not None:
+            raise self._error
+        assert self._response is not None
+        return self._response
+
+    def _set(self, response: EnsembleResponse) -> None:
+        self._response = response
+        self._done = True
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._done = True
+
+
+@dataclasses.dataclass
+class _Pending:
+    request: EnsembleRequest
+    future: ResponseFuture
+    age_ticks: int = 0
+
+
+class Scheduler:
+    """Micro-batching front-end over an :class:`EnsembleServer`."""
+
+    def __init__(self, server: EnsembleServer, max_batch_size: int = 8,
+                 max_wait_ticks: int = 4):
+        if max_batch_size < 1:
+            raise ValueError("max_batch_size must be >= 1")
+        self.server = server
+        self.max_batch_size = max_batch_size
+        self.max_wait_ticks = max_wait_ticks
+        self._queue: List[_Pending] = []
+        self.stats = {"submitted": 0, "dispatched_batches": 0, "dispatched_requests": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, request: EnsembleRequest) -> ResponseFuture:
+        """Enqueue one request; dispatches inline once a full batch forms.
+
+        The request's policy override is fully resolved here (name, kwargs,
+        budget), so a malformed request is rejected before it can poison a
+        micro-batch shared with other submitters."""
+        key = self.server._policy_key(request)
+        hash(key)  # unhashable policy_kwargs values would break grouping
+        self.server._build_policy(key)  # raises on unknown name / bad kwargs
+        future = ResponseFuture(self)
+        self._queue.append(_Pending(request, future))
+        self.stats["submitted"] += 1
+        while len(self._queue) >= self.max_batch_size:
+            self._dispatch(self.max_batch_size)
+        return future
+
+    def tick(self) -> int:
+        """Advance the logical clock; dispatch batches that waited too long.
+
+        Returns the number of requests dispatched this tick."""
+        for p in self._queue:
+            p.age_ticks += 1
+        served = 0
+        while self._queue and self._queue[0].age_ticks >= self.max_wait_ticks:
+            served += self._dispatch(self.max_batch_size)
+        return served
+
+    def flush(self) -> int:
+        """Dispatch everything queued, regardless of age or batch size."""
+        served = 0
+        while self._queue:
+            served += self._dispatch(self.max_batch_size)
+        return served
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, limit: int) -> int:
+        batch, self._queue = self._queue[:limit], self._queue[limit:]
+        if not batch:
+            return 0
+        try:
+            responses = self.server.serve_requests([p.request for p in batch])
+        except Exception as exc:
+            # the batch is already popped; resolve every sibling future with
+            # the cause instead of leaving them pending forever
+            for p in batch:
+                p.future._fail(exc)
+            raise
+        for p, response in zip(batch, responses):
+            p.future._set(response)
+        self.stats["dispatched_batches"] += 1
+        self.stats["dispatched_requests"] += len(batch)
+        return len(batch)

@@ -1,0 +1,103 @@
+"""Test bootstrap.
+
+The container image does not ship ``hypothesis``; rather than skip the
+property tests we install a minimal deterministic stand-in that supports
+the subset of the API the suite uses (``given``, ``settings``, and the
+``integers`` / ``sampled_from`` / ``text`` / ``floats`` / ``booleans``
+strategies).  Each ``@given`` test runs ``max_examples`` seeded draws, so
+the suite stays reproducible run-to-run.  When real hypothesis is
+installed it is used unchanged.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    _TEXT_ALPHABET = (
+        "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789"
+        " \t\n!@#$%^&*()-_=+[]{};:'\",.<>/?\\|`~"
+        "éüñßøπ中日한🎉𝄞́\ud800"
+    )
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value=0, max_value=1 << 16):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    def _text(alphabet=_TEXT_ALPHABET, min_size=0, max_size=40):
+        alphabet = list(alphabet)
+
+        def draw(rng):
+            k = rng.randint(min_size, max_size)
+            return "".join(alphabet[rng.randrange(len(alphabet))] for _ in range(k))
+
+        return _Strategy(draw)
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            k = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(k)]
+
+        return _Strategy(draw)
+
+    class _SettingsDecorator:
+        def __init__(self, max_examples=20, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._max_examples = self.max_examples
+            return fn
+
+    def _given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            def runner():
+                n = getattr(runner, "_max_examples", 20)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    args = [s.example(rng) for s in arg_strategies]
+                    kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return decorate
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = _integers
+    strategies.floats = _floats
+    strategies.booleans = _booleans
+    strategies.sampled_from = _sampled_from
+    strategies.text = _text
+    strategies.lists = _lists
+
+    shim = types.ModuleType("hypothesis")
+    shim.given = _given
+    shim.settings = _SettingsDecorator
+    shim.strategies = strategies
+    shim.__is_repro_shim__ = True
+
+    sys.modules["hypothesis"] = shim
+    sys.modules["hypothesis.strategies"] = strategies

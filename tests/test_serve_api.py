@@ -1,0 +1,284 @@
+"""Request-level serving API: policy registry, scheduler, backends."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import (
+    EpsilonConstraint,
+    PolicyRegistry,
+    SelectionPolicy,
+    available_policies,
+    build_predictor,
+    make_policy,
+    realized_cost_fraction,
+    select_under_budget,
+)
+from repro.data import DEFAULT_POOL, generate_dataset
+from repro.models import build_model
+from repro.serve import (
+    EnsembleRequest,
+    EnsembleServer,
+    LiveLMBackend,
+    LiveMember,
+    MemberBackend,
+    Scheduler,
+    SimBackend,
+    requests_from_records,
+)
+
+
+@pytest.fixture(scope="module")
+def stack():
+    pred = build_predictor(num_models=len(DEFAULT_POOL))
+    pp = pred.init(jax.random.key(0))
+    fuser = build_model(configs.get("gen-fuser"))
+    fp = fuser.init(jax.random.key(1))
+    return pred, pp, fuser, fp
+
+
+def _toy():
+    rng = np.random.default_rng(0)
+    quality = jnp.asarray(rng.uniform(-4, -2, (6, 8)), jnp.float32)
+    costs = jnp.asarray(rng.uniform(1e11, 5e12, (6, 8)), jnp.float32)
+    return quality, costs
+
+
+# ---------------------------------------------------------------------------
+# Policy registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_round_trips_every_builtin():
+    quality, costs = _toy()
+    assert available_policies()  # non-empty
+    for name in available_policies():
+        policy = make_policy(name)
+        assert isinstance(policy, SelectionPolicy)
+        assert policy.name == name
+        mask = np.asarray(policy.select(quality, costs))
+        assert mask.shape == quality.shape and mask.dtype == bool
+        assert mask.sum(axis=1).min() >= 1  # every query gets an answer
+
+
+def test_registry_budget_kwarg_uniform():
+    """Every factory tolerates a budget override; budget policies obey it."""
+    quality, costs = _toy()
+    for name in available_policies():
+        policy = make_policy(name, budget=0.3)
+        assert isinstance(policy, SelectionPolicy)
+    tight = make_policy("modi", budget=0.05).select(quality, costs)
+    loose = make_policy("modi", budget=1.0).select(quality, costs)
+    assert np.asarray(tight).sum() < np.asarray(loose).sum()
+    assert bool(jnp.all(realized_cost_fraction(loose, costs) <= 1.0 + 1e-6))
+
+
+def test_registry_unknown_name_and_duplicates():
+    with pytest.raises(KeyError):
+        make_policy("no-such-policy")
+    reg = PolicyRegistry()
+    reg.register("x", lambda: None)
+    with pytest.raises(ValueError):
+        reg.register("x", lambda: None)
+
+
+def test_registry_eps_passthrough():
+    policy = make_policy("modi", eps=EpsilonConstraint(0.4, buckets=64))
+    assert policy.eps.fraction == 0.4 and policy.eps.buckets == 64
+
+
+# ---------------------------------------------------------------------------
+# Degenerate-cost guards
+# ---------------------------------------------------------------------------
+
+
+def test_zero_cost_rows_do_not_nan():
+    quality = jnp.asarray(np.random.default_rng(0).uniform(-4, -2, (3, 4)), jnp.float32)
+    costs = jnp.zeros((3, 4), jnp.float32)
+    mask = select_under_budget(quality, costs, EpsilonConstraint(0.2))
+    assert not bool(jnp.any(jnp.isnan(mask.astype(jnp.float32))))
+    frac = realized_cost_fraction(mask, costs)
+    assert bool(jnp.all(frac == 0.0))
+
+
+def test_random_policy_exactly_k_and_batch_invariant():
+    quality, costs = _toy()
+    mask = np.asarray(make_policy("random", k=3).select(quality, costs))
+    assert (mask.sum(axis=1) == 3).all()
+    # independent draws per query
+    assert len({tuple(row) for row in mask}) > 1
+    # a query's draw does not depend on its admission-batch position
+    solo = np.asarray(make_policy("random", k=3).select(quality[2:3], costs[2:3]))
+    assert (solo[0] == mask[2]).all()
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+def test_backends_satisfy_protocol():
+    sim = SimBackend(DEFAULT_POOL)
+    assert isinstance(sim, MemberBackend)
+    cfg = configs.get("smollm-360m").reduced(dtype="float32")
+    model = build_model(cfg)
+    live = LiveLMBackend([LiveMember(DEFAULT_POOL[0], model, model.init(jax.random.key(0)))])
+    assert isinstance(live, MemberBackend)
+    assert sim.num_members() == len(DEFAULT_POOL) and live.num_members() == 1
+
+    recs = generate_dataset(3, seed=7)
+    sim_out = sim.generate(0, recs, max_new_tokens=16)
+    live_out = live.generate(0, recs, max_new_tokens=8)
+    assert len(sim_out) == len(live_out) == 3
+    assert all(isinstance(t, str) for t in sim_out + live_out)
+
+
+def test_sim_backend_deterministic_per_query():
+    """Responses depend on (seed, member, query), not batch composition."""
+    sim = SimBackend(DEFAULT_POOL, seed=3)
+    recs = generate_dataset(5, seed=9)
+    full = sim.generate(2, recs, max_new_tokens=16)
+    singles = [sim.generate(2, [r], max_new_tokens=16)[0] for r in recs]
+    assert full == singles
+
+
+# ---------------------------------------------------------------------------
+# Scheduler vs batch path
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_matches_batch_serve(stack):
+    pred, pp, fuser, fp = stack
+    recs = generate_dataset(6, seed=3)
+    server = EnsembleServer(DEFAULT_POOL, make_policy("modi", budget=0.2),
+                            pred, pp, fuser, fp)
+    batch = server.serve(recs)
+
+    server2 = EnsembleServer(DEFAULT_POOL, make_policy("modi", budget=0.2),
+                             pred, pp, fuser, fp)
+    sched = Scheduler(server2, max_batch_size=2, max_wait_ticks=2)
+    futures = [sched.submit(req) for req in requests_from_records(recs)]
+    assert sched.pending <= 1  # full micro-batches dispatched inline
+    sched.flush()
+    out = [f.result() for f in futures]
+    assert [r.text for r in out] == batch.responses
+    assert all((r.mask == batch.mask[i]).all() for i, r in enumerate(out))
+    assert all(f.done() for f in futures)
+    assert sched.stats["dispatched_requests"] == 6
+
+
+def test_scheduler_tick_and_result_force_dispatch(stack):
+    pred, pp, fuser, fp = stack
+    recs = generate_dataset(3, seed=5)
+    server = EnsembleServer(DEFAULT_POOL, make_policy("best-single"), pred, pp, fuser, fp)
+    sched = Scheduler(server, max_batch_size=8, max_wait_ticks=2)
+    f0 = sched.submit(requests_from_records(recs)[0])
+    assert not f0.done() and sched.pending == 1
+    assert sched.tick() == 0  # age 1 < max_wait_ticks
+    assert sched.tick() == 1  # aged out -> dispatched
+    assert f0.done()
+    f1 = sched.submit(requests_from_records(recs)[1])
+    r1 = f1.result()  # forces a flush of the still-queued request
+    assert r1.text == f1.result().text and sched.pending == 0
+    assert r1.policy_name == "best-single"
+    assert set(r1.timing) == {"predict_s", "select_s", "generate_s", "fuse_s", "total_s"}
+
+
+def test_per_request_budget_and_policy_override(stack):
+    pred, pp, fuser, fp = stack
+    rec = generate_dataset(1, seed=11)[0]
+    server = EnsembleServer(DEFAULT_POOL, make_policy("modi", budget=0.2),
+                            pred, pp, fuser, fp)
+    tight, loose, blender = server.serve_requests([
+        EnsembleRequest(query=rec.query, record=rec, budget=0.15),
+        EnsembleRequest(query=rec.query, record=rec, budget=1.0),
+        EnsembleRequest(query=rec.query, record=rec, policy="llm-blender"),
+    ])
+    assert tight.mask.sum() < loose.mask.sum()
+    assert tight.cost_fraction <= 0.15 + 1e-6
+    assert blender.mask.all() and blender.policy_name == "llm-blender"
+    # member texts present exactly where selected; costs accounted
+    for resp in (tight, loose, blender):
+        for j in range(len(DEFAULT_POOL)):
+            assert (resp.member_texts[j] is not None) == bool(resp.mask[j])
+        assert resp.realized_cost >= 0.0
+
+
+def test_budget_override_preserves_default_policy_kwargs(stack):
+    """A budget-only override must not reset the configured policy's other
+    constructor kwargs to registry defaults."""
+    pred, pp, fuser, fp = stack
+    rec = generate_dataset(1, seed=13)[0]
+    server = EnsembleServer(
+        DEFAULT_POOL, make_policy("hybrid-router", small_index=7, large_index=1),
+        pred, pp, fuser, fp,
+    )
+    resp = server.serve_requests(
+        [EnsembleRequest(query=rec.query, record=rec, budget=0.5)]
+    )[0]
+    assert set(np.flatnonzero(resp.mask).tolist()) <= {1, 7}
+    # and for a budget policy the override actually moves the constraint
+    server2 = EnsembleServer(DEFAULT_POOL, make_policy("modi", buckets=64),
+                             pred, pp, fuser, fp)
+    key = server2._policy_key(EnsembleRequest(query="q", budget=0.4))
+    policy = server2._build_policy(key)
+    assert policy.eps.fraction == 0.4 and policy.eps.buckets == 64
+
+
+def test_max_new_tokens_enforced_and_batch_invariant(stack):
+    """The per-request cap applies to member texts even for the row holding
+    the group max, so texts cannot depend on micro-batch composition."""
+    pred, pp, fuser, fp = stack
+    rec = generate_dataset(1, seed=17)[0]
+    server = EnsembleServer(DEFAULT_POOL, make_policy("llm-blender"),
+                            pred, pp, fuser, fp)
+    solo = server.serve_requests(
+        [EnsembleRequest(query=rec.query, record=rec, max_new_tokens=4)]
+    )[0]
+    mixed = server.serve_requests([
+        EnsembleRequest(query=rec.query, record=rec, max_new_tokens=4),
+        EnsembleRequest(query=rec.query, record=rec, max_new_tokens=32),
+    ])[0]
+    assert solo.member_texts == mixed.member_texts
+    assert all(t is None or len(t.encode()) <= 4 for t in solo.member_texts)
+
+
+def test_scheduler_rejects_malformed_requests_at_submit(stack):
+    pred, pp, fuser, fp = stack
+    server = EnsembleServer(DEFAULT_POOL, make_policy("best-single"), pred, pp, fuser, fp)
+    sched = Scheduler(server, max_batch_size=8)
+    with pytest.raises(KeyError):
+        sched.submit(EnsembleRequest(query="q", policy="typo"))
+    with pytest.raises(TypeError):
+        sched.submit(EnsembleRequest(query="q", policy_kwargs={"bogus_field": 1}))
+    assert sched.pending == 0  # rejected before enqueueing
+
+
+def test_scheduler_dispatch_failure_fails_every_future(stack, monkeypatch):
+    """An engine-side crash must resolve all sibling futures with the cause
+    rather than leaving them pending forever."""
+    pred, pp, fuser, fp = stack
+    recs = generate_dataset(2, seed=19)
+    server = EnsembleServer(DEFAULT_POOL, make_policy("best-single"), pred, pp, fuser, fp)
+    sched = Scheduler(server, max_batch_size=8)
+    futures = [sched.submit(req) for req in requests_from_records(recs)]
+
+    def boom(requests):
+        raise RuntimeError("engine crashed")
+
+    monkeypatch.setattr(server, "serve_requests", boom)
+    with pytest.raises(RuntimeError):
+        sched.flush()
+    assert all(f.done() for f in futures)
+    for f in futures:
+        with pytest.raises(RuntimeError):
+            f.result()
+
+
+def test_backend_pool_size_mismatch_rejected(stack):
+    pred, pp, fuser, fp = stack
+    with pytest.raises(ValueError):
+        EnsembleServer(DEFAULT_POOL, make_policy("best-single"), pred, pp, fuser, fp,
+                       backend=SimBackend(DEFAULT_POOL[:3]))
