@@ -1,6 +1,8 @@
 """Knapsack micro-benchmark: paper Algorithm 1 (host Python) vs the batched
-lax DP vs the Pallas kernel (interpret mode on CPU — kernel-body semantics;
-TPU timing comes from the roofline, not this host clock)."""
+backtrack-free bitmask DP (lax) vs the Pallas kernel (interpret mode on CPU
+— kernel-body semantics; TPU timing comes from the roofline, not this host
+clock).  Both accelerated paths carry packed uint32 selections with the DP
+row, so no [N, Q, B+1] take tensor is ever allocated."""
 
 from __future__ import annotations
 

@@ -38,8 +38,14 @@ def select_under_budget(
     quality: jax.Array,  # [Q, N] predicted scores (may be negative, BARTScore-like)
     costs_flops: jax.Array,  # [Q, N] per-query FLOPs
     eps: EpsilonConstraint,
+    impl: str = "lax",
 ) -> jax.Array:
-    """MODI's selection step: alpha-shift scores, bucketize costs, knapsack."""
+    """MODI's selection step: alpha-shift scores, bucketize costs, knapsack.
+
+    ``impl`` picks the bitmask-DP backend: ``"lax"`` (batched jittable
+    loop, the serving default) or ``"pallas"`` (the VMEM-resident TPU
+    kernel in ``repro.kernels.knapsack``).  Both produce identical
+    selections."""
     quality = jnp.asarray(quality, jnp.float32)
     # FLOP counts up to ~1e15 are exactly representable enough for bucketing
     costs_flops = jnp.asarray(costs_flops, jnp.float32)
@@ -51,6 +57,12 @@ def select_under_budget(
     scale = jnp.where(scale > 0, scale, 1.0)
     int_costs = jnp.ceil(costs_flops / scale).astype(jnp.int32)
     int_costs = jnp.maximum(int_costs, 1)
+    if impl == "pallas":
+        from repro.kernels.knapsack import knapsack_select_pallas
+
+        return knapsack_select_pallas(profits, int_costs, eps.buckets)
+    if impl != "lax":
+        raise ValueError(f"unknown knapsack impl {impl!r}; expected 'lax' or 'pallas'")
     return knapsack_select(profits, int_costs, eps.buckets)
 
 

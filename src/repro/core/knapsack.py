@@ -4,10 +4,20 @@ Three implementations:
 
 * :func:`knapsack_reference` — the paper's Algorithm 1, verbatim Python.
   Ground truth for tests.
-* :func:`knapsack_select` — batched, jittable ``lax.fori_loop`` DP used by
-  the serving engine (one knapsack per query per batch).
-* ``repro.kernels.knapsack`` — Pallas TPU kernel with the DP row resident
-  in VMEM (the selection hot-spot at serving batch sizes).
+* :func:`knapsack_select` — batched, jittable backtrack-free bitmask DP
+  used by the serving engine (one knapsack per query per batch).
+* ``repro.kernels.knapsack`` — Pallas TPU kernel of the same bitmask
+  formulation, with the DP row *and* mask row resident in VMEM (the
+  selection hot-spot at serving batch sizes).
+
+The bitmask formulation carries, next to each DP capacity entry
+``dp[j]``, the packed item subset that achieves it (one ``uint32`` word
+per 32 items).  The subset recurrence mirrors the value recurrence —
+``mask'[j] = take ? mask[j-c] | (1 << i) : mask[j]`` — so the selection
+pops out of the final row at ``j = budget`` with no ``[N, Q, B+1]``
+take tensor and no second sequential backtrack loop.  ``take`` is the
+*strict* improvement test, which reproduces Algorithm 1's
+ties-keep-not-taken backtrack rule exactly.
 
 Profit transformation (paper Eq. 4-5): BARTScores are negative, so profits
 are ``alpha + score`` with ``alpha > max|score|``.
@@ -65,8 +75,20 @@ def knapsack_reference(models: Sequence[dict], budget: int) -> List[dict]:
 
 
 # ---------------------------------------------------------------------------
-# Batched jittable DP
+# Batched jittable bitmask DP (backtrack-free)
 # ---------------------------------------------------------------------------
+
+
+def mask_words(n: int) -> int:
+    """uint32 words needed to hold one bit per item."""
+    return max(1, -(-n // 32))
+
+
+def unpack_selection(words: jax.Array, n: int) -> jax.Array:
+    """[Q, W] uint32 packed subsets -> [Q, N] bool selection mask."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    bits = words[:, idx // 32] >> (idx % 32).astype(jnp.uint32)
+    return (bits & jnp.uint32(1)).astype(bool)
 
 
 def knapsack_select(profits: jax.Array, costs: jax.Array, budget: int) -> jax.Array:
@@ -76,40 +98,44 @@ def knapsack_select(profits: jax.Array, costs: jax.Array, budget: int) -> jax.Ar
     costs:   [Q, N] int32, >= 1 (bucketized — see cost.normalize_costs).
     budget:  static int capacity.
     Returns: [Q, N] bool selection mask, optimal per query.
+
+    One forward pass; the selection rides along as per-capacity ``uint32``
+    bitmasks (peak live state ``O(Q * (B+1))`` words), matching Algorithm
+    1's backtrack — including its ties-keep-not-taken rule — bit for bit.
     """
     profits = jnp.asarray(profits, jnp.float32)
     costs = jnp.asarray(costs, jnp.int32)
     q, n = profits.shape
     bp1 = budget + 1
+    w = mask_words(n)
     js = jnp.arange(bp1, dtype=jnp.int32)
+    word_ids = jnp.arange(w, dtype=jnp.int32)
 
     def item_step(i, carry):
-        dp, take = carry  # dp [Q, B+1]; take [N, Q, B+1] bool
+        dp, masks = carry  # dp [Q, B+1] f32; masks [Q, W, B+1] uint32
         c = costs[:, i][:, None]  # [Q,1]
         p = profits[:, i][:, None]
         idx = js[None, :] - c  # [Q, B+1]
         valid = idx >= 0
-        prev = jnp.take_along_axis(dp, jnp.maximum(idx, 0), axis=1)
+        safe = jnp.maximum(idx, 0)
+        prev = jnp.take_along_axis(dp, safe, axis=1)
         cand = jnp.where(valid, prev + p, -jnp.inf)
         tk = cand > dp  # strict: ties keep "not taken" (Algorithm 1 backtrack)
-        new_dp = jnp.maximum(dp, cand)
-        return new_dp, take.at[i].set(tk)
+        shifted = jnp.take_along_axis(
+            masks, jnp.broadcast_to(safe[:, None, :], (q, w, bp1)), axis=2
+        )
+        bit = jnp.where(
+            word_ids == i // 32,
+            jax.lax.shift_left(jnp.uint32(1), (i % 32).astype(jnp.uint32)),
+            jnp.uint32(0),
+        )  # [W]
+        new_masks = jnp.where(tk[:, None, :], shifted | bit[None, :, None], masks)
+        return jnp.maximum(dp, cand), new_masks
 
     dp0 = jnp.zeros((q, bp1), jnp.float32)
-    take0 = jnp.zeros((n, q, bp1), bool)
-    dp, take = jax.lax.fori_loop(0, n, item_step, (dp0, take0))
-
-    def back_step(k, carry):
-        sel, j = carry  # sel [Q,N] bool; j [Q]
-        i = n - 1 - k
-        t = take[i, jnp.arange(q), j]
-        sel = sel.at[:, i].set(t)
-        j = j - jnp.where(t, costs[:, i], 0)
-        return sel, j
-
-    sel0 = jnp.zeros((q, n), bool)
-    sel, _ = jax.lax.fori_loop(0, n, back_step, (sel0, jnp.full((q,), budget, jnp.int32)))
-    return sel
+    masks0 = jnp.zeros((q, w, bp1), jnp.uint32)
+    _, masks = jax.lax.fori_loop(0, n, item_step, (dp0, masks0))
+    return unpack_selection(masks[:, :, budget], n)
 
 
 def knapsack_value(profits: jax.Array, costs: jax.Array, budget: int) -> jax.Array:

@@ -42,10 +42,11 @@ class ModiPolicy(SelectionPolicy):
     member so every query gets an answer."""
 
     eps: EpsilonConstraint
+    impl: str = "lax"  # bitmask-DP backend: "lax" or "pallas" (TPU kernel)
     name: str = "modi"
 
     def select(self, quality, costs):
-        mask = select_under_budget(quality, costs, self.eps)
+        mask = select_under_budget(quality, costs, self.eps, impl=self.impl)
         costs = jnp.asarray(costs, jnp.float32)
         cheapest = jax.nn.one_hot(jnp.argmin(costs, axis=1), costs.shape[1], dtype=bool)
         empty = ~jnp.any(mask, axis=1, keepdims=True)
@@ -221,8 +222,8 @@ def _eps(eps: Optional[EpsilonConstraint], budget: Optional[float], buckets: int
 
 
 def _make_modi(eps: Optional[EpsilonConstraint] = None, budget: Optional[float] = None,
-               buckets: int = 256) -> SelectionPolicy:
-    return ModiPolicy(_eps(eps, budget, buckets))
+               buckets: int = 256, impl: str = "lax") -> SelectionPolicy:
+    return ModiPolicy(_eps(eps, budget, buckets), impl=impl)
 
 
 def _make_greedy_ratio(eps: Optional[EpsilonConstraint] = None, budget: Optional[float] = None,

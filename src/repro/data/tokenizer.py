@@ -38,6 +38,23 @@ class ByteTokenizer:
         raw = bytes(i for i in ids if 0 <= i < 256)
         return raw.decode("utf-8", errors="replace")
 
+    def decode_capped(self, ids: Iterable[int], cap: int) -> str:
+        """Decode at most ``cap`` tokens, stripping a trailing *incomplete*
+        UTF-8 sequence the cut would otherwise turn into U+FFFD — a
+        replacement char re-encodes to 3 bytes, so naive truncate-and-decode
+        can yield text whose re-encoding exceeds the cap (up to 3x)."""
+        raw = bytes(i for i in ids if 0 <= i < 256)[:max(cap, 0)]
+        for k in range(1, min(4, len(raw)) + 1):
+            b = raw[-k]
+            if b < 0x80:  # ASCII tail — complete
+                break
+            if b >= 0xC0:  # lead byte k bytes from the end; sequence length:
+                need = 2 if b < 0xE0 else 3 if b < 0xF0 else 4
+                if need > k:  # cut mid-sequence -> drop the partial char
+                    raw = raw[:-k]
+                break
+        return raw.decode("utf-8", errors="replace")
+
     def pad_batch(self, seqs: List[List[int]], max_len: int) -> np.ndarray:
         out = np.full((len(seqs), max_len), PAD_ID, np.int32)
         for i, s in enumerate(seqs):

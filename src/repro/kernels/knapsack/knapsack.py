@@ -1,15 +1,21 @@
-"""Pallas TPU kernel: batched 0/1-knapsack forward DP (paper Algorithm 1).
+"""Pallas TPU kernel: batched 0/1-knapsack bitmask DP (paper Algorithm 1).
 
 The paper runs its DP once per query on the host; at serving batch sizes the
 selection step becomes a per-batch hot spot, so we push the DP onto the TPU:
 
 * one grid program per query *block* — the whole DP row ``dp[0..budget]``
-  for ``BQ`` queries stays resident in VMEM (a few KB; VMEM is ~16 MB);
+  AND the packed selection row (one ``uint32`` word per 32 items per
+  capacity) for ``BQ`` queries stay resident in VMEM (a few KB each; VMEM
+  is ~16 MB);
 * the item loop is the sequential wavefront; the row update
-  ``dp'[j] = max(dp[j], dp[j-c] + p)`` is fully vectorized on the VPU
-  (8x128 lanes) — the dynamic shift by ``c`` is a roll + iota mask;
-* take-decision bits stream out to HBM; subset recovery is a cheap
-  host-side gather (ops.backtrack), keeping the kernel forward-only.
+  ``dp'[j] = max(dp[j], dp[j-c] + p)`` and the mask update
+  ``mask'[j] = take ? mask[j-c] | (1 << i) : mask[j]`` are fully
+  vectorized on the VPU (8x128 lanes) — the dynamic shift by ``c`` is a
+  gather over the capacity axis;
+* only the final DP row and the packed selection at ``j = budget`` stream
+  out to HBM.  There is no ``[N, Q, B+1]`` take tensor and no second
+  backtrack loop — the strict improvement test reproduces Algorithm 1's
+  ties-keep-not-taken backtrack bit for bit (see ``core.knapsack``).
 
 Budget axis should be a multiple of 128 (lane width) for clean tiling;
 callers pick ``buckets`` accordingly (cost.normalize_costs default 256).
@@ -23,27 +29,45 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.knapsack import mask_words
+
 NEG_INF = -1e30
 
 
-def _kernel(profits_ref, costs_ref, dp_ref, take_ref, *, n_items: int, bp1: int):
-    # profits_ref/costs_ref: [BQ, N]; dp_ref: [BQ, B+1]; take_ref: [BQ, N, B+1]
+def _kernel(profits_ref, costs_ref, dp_ref, sel_ref, *, n_items: int, bp1: int,
+            n_words: int):
+    # profits_ref/costs_ref: [BQ, N]; dp_ref: [BQ, B+1]; sel_ref: [BQ, W] u32
     bq = dp_ref.shape[0]
-    dp_ref[...] = jnp.zeros((bq, bp1), jnp.float32)
     js = jax.lax.broadcasted_iota(jnp.int32, (bq, bp1), 1)
+    # >= 2-D iota: Mosaic rejects 1-D iota when lowering for real TPUs
+    word_ids = jax.lax.broadcasted_iota(jnp.int32, (1, n_words, 1), 1)
 
-    def item_step(i, dp):
+    def item_step(i, carry):
+        dp, masks = carry  # dp [BQ, B+1]; masks [BQ, W, B+1] uint32
         c = costs_ref[:, i][:, None]  # [BQ, 1]
         p = profits_ref[:, i][:, None]
-        # dp[j - c] via per-row dynamic roll; j < c lanes are invalidated.
+        # dp[j - c] / mask[j - c] via per-row gather; j < c lanes invalidated.
         idx = js - c
-        shifted = jnp.take_along_axis(dp, jnp.maximum(idx, 0), axis=1)
-        cand = jnp.where(idx >= 0, shifted + p, NEG_INF)
-        take_ref[:, i, :] = cand > dp
-        return jnp.maximum(dp, cand)
+        safe = jnp.maximum(idx, 0)
+        shifted_dp = jnp.take_along_axis(dp, safe, axis=1)
+        cand = jnp.where(idx >= 0, shifted_dp + p, NEG_INF)
+        tk = cand > dp
+        shifted_masks = jnp.take_along_axis(
+            masks, jnp.broadcast_to(safe[:, None, :], (bq, n_words, bp1)), axis=2
+        )
+        bit = jnp.where(
+            word_ids == i // 32,
+            jax.lax.shift_left(jnp.uint32(1), (i % 32).astype(jnp.uint32)),
+            jnp.uint32(0),
+        )  # [1, W, 1] — broadcasts over queries and capacities
+        masks = jnp.where(tk[:, None, :], shifted_masks | bit, masks)
+        return jnp.maximum(dp, cand), masks
 
-    dp = jax.lax.fori_loop(0, n_items, item_step, dp_ref[...])
+    dp0 = jnp.zeros((bq, bp1), jnp.float32)
+    masks0 = jnp.zeros((bq, n_words, bp1), jnp.uint32)
+    dp, masks = jax.lax.fori_loop(0, n_items, item_step, (dp0, masks0))
     dp_ref[...] = dp
+    sel_ref[...] = masks[:, :, bp1 - 1]
 
 
 @functools.partial(jax.jit, static_argnums=(2, 3, 4))
@@ -54,9 +78,10 @@ def knapsack_dp_pallas(
     block_q: int = 8,
     interpret: bool = True,
 ):
-    """Forward DP: returns (dp_final [Q, B+1], take [Q, N, B+1])."""
+    """Bitmask DP: returns (dp_final [Q, B+1], sel_words [Q, W] uint32)."""
     q, n = profits.shape
     bp1 = budget + 1
+    w = mask_words(n)
     pad = (-q) % block_q
     if pad:
         profits = jnp.pad(profits, ((0, pad), (0, 0)))
@@ -64,8 +89,8 @@ def knapsack_dp_pallas(
     qp = profits.shape[0]
 
     grid = (qp // block_q,)
-    dp, take = pl.pallas_call(
-        functools.partial(_kernel, n_items=n, bp1=bp1),
+    dp, sel = pl.pallas_call(
+        functools.partial(_kernel, n_items=n, bp1=bp1, n_words=w),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_q, n), lambda i: (i, 0)),
@@ -73,12 +98,12 @@ def knapsack_dp_pallas(
         ],
         out_specs=[
             pl.BlockSpec((block_q, bp1), lambda i: (i, 0)),
-            pl.BlockSpec((block_q, n, bp1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_q, w), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((qp, bp1), jnp.float32),
-            jax.ShapeDtypeStruct((qp, n, bp1), jnp.bool_),
+            jax.ShapeDtypeStruct((qp, w), jnp.uint32),
         ],
         interpret=interpret,
     )(profits.astype(jnp.float32), costs.astype(jnp.int32))
-    return dp[:q], take[:q]
+    return dp[:q], sel[:q]

@@ -1,27 +1,45 @@
-"""Jitted public API for the knapsack kernel with a pure-JAX fallback."""
+"""Jitted public API for the knapsack kernel, plus the independent oracle.
+
+``knapsack_select_pallas`` runs the backtrack-free bitmask DP (see
+``core.knapsack``): the kernel emits the packed optimal subset at
+``j = budget`` directly, so the host-side work is a single bit-unpack —
+no take tensor, no backtrack.  ``knapsack_select_ref`` is the test-only
+take-tensor + backtrack formulation kept deliberately different so the
+two derivations cross-check each other.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.knapsack import unpack_selection
 from repro.kernels.knapsack.knapsack import knapsack_dp_pallas
 from repro.kernels.knapsack.ref import backtrack, knapsack_dp_ref
 
 
 def knapsack_select_pallas(
-    profits: jax.Array, costs: jax.Array, budget: int, interpret: bool = True
+    profits: jax.Array, costs: jax.Array, budget: int,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Drop-in replacement for core.knapsack.knapsack_select."""
-    _, take = knapsack_dp_pallas(
+    """Drop-in replacement for core.knapsack.knapsack_select.
+
+    ``interpret=None`` resolves by backend: the real Mosaic lowering on
+    TPU, interpret mode elsewhere (kernel-body semantics on CPU) — so
+    ``select_under_budget(..., impl="pallas")`` reaches the compiled
+    kernel on TPU without callers threading the flag."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = profits.shape[1]
+    _, sel_words = knapsack_dp_pallas(
         jnp.asarray(profits, jnp.float32), jnp.asarray(costs, jnp.int32), budget,
         interpret=interpret,
     )
-    return backtrack(take, jnp.asarray(costs, jnp.int32), budget)
+    return unpack_selection(sel_words, n)
 
 
 def knapsack_select_ref(profits: jax.Array, costs: jax.Array, budget: int) -> jax.Array:
-    _, take = knapsack_dp_ref(
-        jnp.asarray(profits, jnp.float32), jnp.asarray(costs, jnp.int32), budget
-    )
-    return backtrack(take, jnp.asarray(costs, jnp.int32), budget)
+    """Independent take-tensor + backtrack oracle (test-only; see ref.py)."""
+    costs = jnp.asarray(costs, jnp.int32)
+    _, take = knapsack_dp_ref(jnp.asarray(profits, jnp.float32), costs, budget)
+    return backtrack(take, costs, budget)

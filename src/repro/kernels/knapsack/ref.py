@@ -1,7 +1,10 @@
-"""Pure-jnp oracle for the batched 0/1-knapsack forward DP.
-
-Returns the take-decision bits; backtracking is a cheap host-side gather
-shared by all implementations (see ops.py)."""
+"""Pure-jnp oracle for the batched 0/1-knapsack DP — deliberately kept as
+the *take-tensor + backtrack* formulation (the pre-bitmask production
+path) so kernel tests compare two independent derivations of Algorithm 1:
+a shared bug in the bitmask mask-carry recurrence (core.knapsack and the
+Pallas kernel) cannot hide by matching itself.  Test-only: the
+``[Q, N, B+1]`` take tensor this allocates is exactly what the serving
+paths no longer materialize."""
 
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ def knapsack_dp_ref(profits: jax.Array, costs: jax.Array, budget: int):
         idx = js[None, :] - c
         prev = jnp.take_along_axis(dp, jnp.maximum(idx, 0), axis=1)
         cand = jnp.where(idx >= 0, prev + p, -jnp.inf)
-        tk = cand > dp
+        tk = cand > dp  # strict: ties keep "not taken" (Algorithm 1 backtrack)
         return jnp.maximum(dp, cand), take.at[:, i].set(tk)
 
     dp0 = jnp.zeros((q, bp1), jnp.float32)

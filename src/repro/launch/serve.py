@@ -34,7 +34,7 @@ from repro.data import (
 )
 from repro.models import build_model
 from repro.optim import AdamW
-from repro.serve import EnsembleServer, Scheduler, requests_from_records
+from repro.serve import BucketLadder, EnsembleServer, Scheduler, requests_from_records
 from repro.train import repeat_batches, train
 import jax.numpy as jnp
 
@@ -117,6 +117,15 @@ def main():
         make_policy(args.policy, budget=args.budget),
         predictor, pred_p, fuser, fuser_p,
     )
+    if args.online:
+        # pre-compile every bucket a scheduler batch can map to: early
+        # micro-batches dispatch before the queue fills, so sizes
+        # 1..max_batch_size all occur, and max_batch_size itself may round
+        # up to a rung above it
+        ladder = BucketLadder()
+        rungs = sorted({ladder.batch_bucket(b)
+                        for b in range(1, args.max_batch_size + 1)})
+        server.warm([(b, server.max_new_tokens) for b in rungs])
     batch = generate_dataset(args.n, seed=args.seed + 999)
     if args.online:
         scheduler = Scheduler(server, max_batch_size=args.max_batch_size)

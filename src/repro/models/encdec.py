@@ -192,14 +192,19 @@ class EncDecLM:
     # ------------------------------------------------------------------
     # Serving
     # ------------------------------------------------------------------
-    def init_cache(self, batch: int, max_seq: int) -> dict:
+    def init_cache(self, batch: int, max_seq: int, enc_seq: Optional[int] = None) -> dict:
+        """``enc_seq`` overrides the config's encoder length so callers that
+        serve a fixed (bucketed) encoder shape get cross-K/V buffers whose
+        shape round-trips through ``prefill`` — a prerequisite for buffer
+        donation in the static-shape fast path (serve.dispatch)."""
         cfg, dtype = self.cfg, self.dtype
         one = attn_mod.init_cache(cfg, batch, max_seq, dtype)
         l, h, hd = cfg.num_layers, cfg.num_heads, cfg.resolved_head_dim
+        se = cfg.enc_seq if enc_seq is None else enc_seq
         return {
             "self": jax.tree.map(lambda t: jnp.broadcast_to(t[None], (l,) + t.shape), one),
-            "ck": jnp.zeros((l, batch, cfg.enc_seq, h, hd), dtype),
-            "cv": jnp.zeros((l, batch, cfg.enc_seq, h, hd), dtype),
+            "ck": jnp.zeros((l, batch, se, h, hd), dtype),
+            "cv": jnp.zeros((l, batch, se, h, hd), dtype),
         }
 
     def prefill(self, params, dec_tokens, cache, enc_frontend=None, enc_tokens=None):

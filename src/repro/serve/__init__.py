@@ -1,10 +1,18 @@
 from repro.serve.api import EnsembleRequest, EnsembleResponse, requests_from_records
 from repro.serve.backends import LiveLMBackend, LiveMember, MemberBackend, SimBackend
+from repro.serve.dispatch import (
+    BucketLadder,
+    DecoderGenerateDispatcher,
+    EncDecGenerateDispatcher,
+)
 from repro.serve.engine import EnsembleServer, ServeResult
 from repro.serve.generate import greedy_generate, greedy_generate_encdec, prompt_positions
 from repro.serve.scheduler import ResponseFuture, Scheduler
 
 __all__ = [
+    "BucketLadder",
+    "DecoderGenerateDispatcher",
+    "EncDecGenerateDispatcher",
     "EnsembleRequest",
     "EnsembleResponse",
     "EnsembleServer",

@@ -9,8 +9,22 @@ ship with the repro:
   a query is identical whether it arrives in a 400-row offline batch or
   as a single online request — the property the Scheduler-equivalence
   guarantee rests on.
-* :class:`LiveLMBackend` — real tiny JAX decoder LMs via
-  ``greedy_generate``.
+* :class:`LiveLMBackend` — real tiny JAX decoder LMs, dispatched through
+  the bucketed static-shape fast path (:mod:`repro.serve.dispatch`) so
+  steady-state traffic compiles each generate bucket once and reuses its
+  donated decode cache.
+
+``max_new_tokens`` may be one int for the whole batch or a per-record
+sequence: backends OWN truncation and must consume at most the row's
+token cap per response (``TOKENIZER.decode_capped`` — the cut never
+fabricates replacement characters, so valid-UTF-8 responses re-encode to
+<= cap tokens; a live LM emitting genuinely invalid interior bytes can
+still decode to U+FFFD, which is content, not cap overflow).  The engine
+never re-tokenizes responses to enforce the cap.  The cap must not
+depend on which other rows share the micro-batch (greedy decoding is
+prefix-stable, so generating a member batch at the rows' max length and
+slicing each row to its own cap equals generating each row alone at its
+own cap).
 
 This replaces the ``live_members is None`` branching that used to live
 inside ``EnsembleServer._generate_member``.
@@ -20,14 +34,27 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import List, Protocol, Sequence, runtime_checkable
+from typing import Dict, List, Protocol, Sequence, Union, runtime_checkable
 
 import numpy as np
 
 from repro.data.mixinstruct import PoolMemberSpec, Record, member_response
 from repro.data.tokenizer import TOKENIZER
 from repro.models.transformer import DecoderLM
+from repro.serve.dispatch import BucketLadder, DecoderGenerateDispatcher
 from repro.serve.generate import greedy_generate
+
+MaxNewTokens = Union[int, Sequence[int]]
+
+
+def per_row_caps(max_new_tokens: MaxNewTokens, n_rows: int) -> List[int]:
+    """Normalize an int-or-sequence token cap to one cap per row."""
+    if isinstance(max_new_tokens, int):
+        return [max_new_tokens] * n_rows
+    caps = list(max_new_tokens)
+    if len(caps) != n_rows:
+        raise ValueError(f"{len(caps)} caps for {n_rows} records")
+    return caps
 
 
 @runtime_checkable
@@ -42,9 +69,10 @@ class MemberBackend(Protocol):
         self,
         member_idx: int,
         records: Sequence[Record],
-        max_new_tokens: int,
+        max_new_tokens: MaxNewTokens,
     ) -> List[str]:
-        """Member ``member_idx``'s response to each record, in order."""
+        """Member ``member_idx``'s response to each record, in order,
+        each truncated to its row's token cap."""
         ...
 
 
@@ -68,12 +96,16 @@ class SimBackend:
         return len(self.pool)
 
     def generate(self, member_idx: int, records: Sequence[Record],
-                 max_new_tokens: int) -> List[str]:
+                 max_new_tokens: MaxNewTokens) -> List[str]:
+        caps = per_row_caps(max_new_tokens, len(records))
         spec = self.pool[member_idx]
-        return [
-            member_response(spec, r, _query_rng(self.seed, member_idx, r.query))
-            for r in records
-        ]
+        out = []
+        for r, cap in zip(records, caps):
+            text = member_response(spec, r, _query_rng(self.seed, member_idx, r.query))
+            # the simulator writes whole responses; one capped decode enforces
+            # the row cap without fabricating U+FFFD at the cut point
+            out.append(TOKENIZER.decode_capped(TOKENIZER.encode(text), cap))
+        return out
 
 
 @dataclasses.dataclass
@@ -87,20 +119,62 @@ class LiveMember:
 
 @dataclasses.dataclass
 class LiveLMBackend:
-    """Live JAX LMs: prompt = ``<bos> query <sep>``, greedy decode."""
+    """Live JAX LMs: prompt = ``<bos> query <sep>``, greedy decode.
+
+    ``fast=True`` routes generation through one
+    :class:`~repro.serve.dispatch.DecoderGenerateDispatcher` per member:
+    micro-batches pad up to the bucket ladder, each bucket compiles once,
+    and the decode cache is donated back to the same buffers call after
+    call.  ``fast=False`` keeps the ad-hoc jit path (one compile per
+    distinct shape)."""
 
     members: Sequence[LiveMember]
     max_query_len: int = 96
+    fast: bool = True
+    ladder: BucketLadder = dataclasses.field(default_factory=BucketLadder)
+    _dispatchers: Dict[int, DecoderGenerateDispatcher] = dataclasses.field(
+        default_factory=dict, repr=False
+    )
 
     def num_members(self) -> int:
         return len(self.members)
 
+    def _dispatcher(self, member_idx: int) -> DecoderGenerateDispatcher:
+        d = self._dispatchers.get(member_idx)
+        if d is None:
+            lm = self.members[member_idx]
+            d = self._dispatchers[member_idx] = DecoderGenerateDispatcher(
+                lm.model, lm.params, ladder=self.ladder
+            )
+        return d
+
+    def compiles(self) -> int:
+        """Total live XLA compiles across member dispatchers."""
+        return sum(d.compiles for d in self._dispatchers.values())
+
+    def warm(self, shapes: Sequence) -> None:
+        """Pre-compile the given (batch, max_new) buckets for every member."""
+        if not self.fast:
+            return  # the ad-hoc jit path has no buckets to warm
+        for j in range(len(self.members)):
+            self._dispatcher(j).warm(
+                [(b, self.max_query_len, n) for b, n in shapes]
+            )
+
     def generate(self, member_idx: int, records: Sequence[Record],
-                 max_new_tokens: int) -> List[str]:
-        lm = self.members[member_idx]
+                 max_new_tokens: MaxNewTokens) -> List[str]:
+        caps = per_row_caps(max_new_tokens, len(records))
+        group_max = max(caps)
         prompts = [
             TOKENIZER.encode(r.query, bos=True) + [TOKENIZER.sep_id] for r in records
         ]
         batch = TOKENIZER.pad_batch(prompts, self.max_query_len)
-        out = greedy_generate(lm.model, lm.params, batch, max_new=max_new_tokens)
-        return [TOKENIZER.decode(row) for row in out]
+        if self.fast:
+            out = self._dispatcher(member_idx)(batch, group_max)
+        else:
+            lm = self.members[member_idx]
+            out = greedy_generate(lm.model, lm.params, batch, max_new=group_max)
+        # slice token ids to the row cap BEFORE the single decode — no
+        # decode->encode->decode round trip per row; decode_capped strips a
+        # cut-induced partial UTF-8 char instead of inflating it to U+FFFD
+        return [TOKENIZER.decode_capped(row, cap) for row, cap in zip(out, caps)]

@@ -46,6 +46,7 @@ from repro.data.tokenizer import TOKENIZER
 from repro.models.encdec import EncDecLM
 from repro.serve.api import EnsembleRequest, EnsembleResponse, requests_from_records
 from repro.serve.backends import LiveLMBackend, LiveMember, MemberBackend, SimBackend
+from repro.serve.dispatch import BucketLadder, EncDecGenerateDispatcher
 from repro.serve.generate import greedy_generate_encdec
 
 
@@ -74,7 +75,11 @@ class EnsembleServer:
         max_query_len: int = 96,
         max_fusion_len: int = 512,
         max_new_tokens: int = 32,
+        max_member_tokens: Optional[int] = None,
         sim_seed: int = 0,
+        fast_generate: bool = True,
+        bucket_ladder: Optional[BucketLadder] = None,
+        warm_shapes: Optional[Sequence[Tuple[int, int]]] = None,
     ):
         self.pool = list(pool)
         self.policy = policy
@@ -82,9 +87,11 @@ class EnsembleServer:
         self.predictor_params = predictor_params
         self.fuser = fuser
         self.fuser_params = fuser_params
+        ladder = bucket_ladder or BucketLadder()
         if backend is None:
             if live_members is not None:
-                backend = LiveLMBackend(list(live_members), max_query_len=max_query_len)
+                backend = LiveLMBackend(list(live_members), max_query_len=max_query_len,
+                                        fast=fast_generate, ladder=ladder)
             else:
                 backend = SimBackend(self.pool, seed=sim_seed)
         if backend.num_members() != len(self.pool):
@@ -96,9 +103,41 @@ class EnsembleServer:
         self.max_query_len = max_query_len
         self.max_fusion_len = max_fusion_len
         self.max_new_tokens = max_new_tokens
+        # cap on member-response tokens entering fusion; None = never truncate
+        # below a row's own max_new cap (the old behaviour hardcoded 64)
+        self.max_member_tokens = max_member_tokens
+        self.fuser_dispatch: Optional[EncDecGenerateDispatcher] = (
+            EncDecGenerateDispatcher(fuser, fuser_params, ladder=ladder)
+            if fast_generate else None
+        )
+        if warm_shapes:
+            self.warm(warm_shapes)
         self.stats: Dict[str, float] = {
             "queries": 0, "batches": 0, "flops": 0.0, "full_flops": 0.0,
         }
+
+    # ------------------------------------------------------------------
+    def warm(self, shapes: Sequence[Tuple[int, int]]) -> None:
+        """Pre-compile generate buckets for (batch, max_new) shapes so the
+        first admission micro-batches don't pay the compile.  Backends
+        opt in by exposing ``warm(shapes)`` (optional protocol hook — see
+        LiveLMBackend); backends without one have nothing to compile."""
+        if self.fuser_dispatch is not None:
+            self.fuser_dispatch.warm(
+                [(b, self.max_fusion_len, n) for b, n in shapes]
+            )
+        backend_warm = getattr(self.backend, "warm", None)
+        if callable(backend_warm):
+            backend_warm(shapes)
+
+    def generate_compiles(self) -> Dict[str, int]:
+        """Live XLA compile counts on the generate fast paths (0 when the
+        corresponding path is disabled or has not run).  Backends report
+        theirs through an optional ``compiles()`` hook."""
+        fuser = self.fuser_dispatch.compiles if self.fuser_dispatch else 0
+        backend_compiles = getattr(self.backend, "compiles", None)
+        members = backend_compiles() if callable(backend_compiles) else 0
+        return {"fuser": fuser, "members": members, "total": fuser + members}
 
     # ------------------------------------------------------------------
     def predict_quality(self, queries: List[str]) -> np.ndarray:
@@ -163,39 +202,52 @@ class EnsembleServer:
                           max_new_per_row: List[int]) -> List[List[Optional[str]]]:
         """[B][N] texts, batched per member over its selected rows.
 
-        Greedy decoding is prefix-stable and the tokenizer is byte-level,
-        so generating each member batch at the rows' max length and then
-        truncating EVERY row to its own limit equals generating each row
-        at its own limit — keeping the per-member batching.  Truncation is
-        unconditional: backends may over-generate (the simulator ignores
-        the limit entirely), and the cap must not depend on which other
-        rows share the micro-batch."""
+        Per-row token caps travel to the backend, which owns truncation
+        (see backends.MemberBackend): each returned text is already at
+        most its row's cap, so no re-tokenization happens here.  Caps are
+        per row, never per micro-batch, so texts cannot depend on which
+        other rows share the batch."""
         b, n = mask.shape
         out: List[List[Optional[str]]] = [[None] * n for _ in range(b)]
         for j in range(n):
-            rows = [i for i in range(b) if mask[i, j]]
-            if not rows:
+            rows = np.flatnonzero(mask[:, j])
+            if rows.size == 0:
                 continue
-            group_max = max(max_new_per_row[i] for i in rows)
-            texts = self.backend.generate(j, [records[i] for i in rows], group_max)
+            texts = self.backend.generate(
+                j, [records[i] for i in rows], [max_new_per_row[i] for i in rows]
+            )
             for i, text in zip(rows, texts):
-                out[i][j] = TOKENIZER.decode(TOKENIZER.encode(text)[: max_new_per_row[i]])
+                out[i][j] = text
         return out
 
     def _fuse(self, queries: List[str], member_out: List[List[Optional[str]]],
               mask: np.ndarray, max_new: int) -> np.ndarray:
         b, n = mask.shape
-        resp_tokens = np.full((b, n, 64), TOKENIZER.pad_id, np.int32)
-        for i in range(b):
-            for j in range(n):
-                if member_out[i][j] is not None:
-                    enc = TOKENIZER.encode(member_out[i][j])[:64]
-                    resp_tokens[i, j, : len(enc)] = enc
+        # member texts are pre-truncated to their row's max_new cap; the
+        # fusion-side cap only narrows further if explicitly configured
+        cap = max_new if self.max_member_tokens is None else self.max_member_tokens
+        flat = [
+            (i, j, text)
+            for i, row in enumerate(member_out)
+            for j, text in enumerate(row)
+            if text is not None
+        ]
+        resp_tokens = np.full((b, n, cap), TOKENIZER.pad_id, np.int32)
+        if flat:
+            # one batched tokenizer call over flat index arrays instead of a
+            # [B, N] Python grid of encode+assign steps
+            ii = np.fromiter((f[0] for f in flat), np.intp, len(flat))
+            jj = np.fromiter((f[1] for f in flat), np.intp, len(flat))
+            resp_tokens[ii, jj] = TOKENIZER.pad_batch(
+                [TOKENIZER.encode(f[2]) for f in flat], cap
+            )
         q_tokens = TOKENIZER.batch_encode(queries, self.max_query_len)
         fuse_in = build_fusion_batch(
             q_tokens, resp_tokens, mask, TOKENIZER.sep_id, self.max_fusion_len,
             TOKENIZER.pad_id,
         )
+        if self.fuser_dispatch is not None:
+            return self.fuser_dispatch(fuse_in, max_new)
         return greedy_generate_encdec(
             self.fuser, self.fuser_params, fuse_in, max_new=max_new
         )

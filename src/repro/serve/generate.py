@@ -3,12 +3,28 @@
 Prompts are right-padded; padded slots get position -1 so they are masked
 out of attention and dropped from the KV cache (see models.attention).
 The decode loop is a single jitted ``lax.scan`` over ``max_new`` steps.
+
+Two entry styles share the same loop bodies:
+
+* :func:`greedy_generate` / :func:`greedy_generate_encdec` — ad-hoc jit
+  per (shape, max_new); the cache is allocated inside the jit.  Simple,
+  but every new shape recompiles and reallocates.
+* ``decoder_generate_with_cache`` / ``encdec_generate_with_cache`` — the
+  cache is a caller-owned argument and is returned, so
+  :mod:`repro.serve.dispatch` can jit them once per shape *bucket* with
+  ``donate_argnums`` on the cache: steady-state traffic reuses the same
+  HBM buffers with zero recompiles and zero reallocations.
+
+Caches carried across calls hold stale state; :func:`reset_cache` clears
+exactly what could leak (position slots and SSM recurrent state) at the
+top of each jitted body — KV values are masked by position and need no
+clearing.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,23 +43,45 @@ def prompt_positions(tokens: jax.Array, pad_id: int) -> Tuple[jax.Array, jax.Arr
     return jnp.where(real, pos, -1), lengths
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
-def _generate_decoder(
+def reset_cache(cache: dict) -> dict:
+    """Make a previously-used decode cache safe for a fresh generation.
+
+    Only state that masking cannot neutralize is cleared: ``pos`` slots
+    (-1 = empty — stale positions would be attended) and SSM recurrent
+    state (``h``/``conv`` accumulate across steps).  Stale K/V values are
+    unreachable once their slot's ``pos`` is -1, so they are left in
+    place — under ``donate_argnums`` this makes the reset a cheap fused
+    in-place init rather than a full-cache rewrite."""
+
+    def reset(path, leaf):
+        name = path[-1].key if path and hasattr(path[-1], "key") else None
+        if name == "pos":
+            return jnp.full_like(leaf, -1)
+        if name in ("h", "conv"):
+            return jnp.zeros_like(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(reset, cache)
+
+
+def decoder_generate_with_cache(
     model: DecoderLM,
     params: dict,
     prompt: jax.Array,  # [B, Sp] right-padded
+    cache: dict,  # model.init_cache(B, Sp + max_new + frontend_tokens)
     max_new: int,
     pad_id: int,
     eos_id: int,
-) -> jax.Array:
+) -> Tuple[jax.Array, dict]:
+    """Shared greedy-decode body; returns (tokens [B, max_new], final cache)."""
     b, sp = prompt.shape
+    cache = reset_cache(cache)
     positions, lengths = prompt_positions(prompt, pad_id)
-    cache = model.init_cache(b, sp + max_new + model.cfg.frontend_tokens)
     # Full-forward prefill: right-padded prompts need the logits at each
     # row's last *real* token (not the last column), so gather per row.
     logits_all, cache, _, _ = model.forward(params, prompt, cache=cache, positions=positions)
     off = model.cfg.frontend_tokens
-    gather_idx = (off + lengths - 1)[:, None, None]
+    gather_idx = jnp.maximum(off + lengths - 1, 0)[:, None, None]
     last = jnp.take_along_axis(
         logits_all, jnp.broadcast_to(gather_idx, (b, 1, logits_all.shape[-1])), axis=1
     )
@@ -60,10 +98,27 @@ def _generate_decoder(
 
     pos0 = lengths + off
     done0 = tok0 == eos_id
-    (_, _, _, _), toks = jax.lax.scan(
+    (_, _, cache, _), toks = jax.lax.scan(
         step, (tok0, pos0, cache, done0), None, length=max_new
     )
-    return toks.swapaxes(0, 1)  # [B, max_new]
+    return toks.swapaxes(0, 1), cache  # [B, max_new]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
+def _generate_decoder(
+    model: DecoderLM,
+    params: dict,
+    prompt: jax.Array,  # [B, Sp] right-padded
+    max_new: int,
+    pad_id: int,
+    eos_id: int,
+) -> jax.Array:
+    b, sp = prompt.shape
+    cache = model.init_cache(b, sp + max_new + model.cfg.frontend_tokens)
+    toks, _ = decoder_generate_with_cache(
+        model, params, prompt, cache, max_new, pad_id, eos_id
+    )
+    return toks
 
 
 def greedy_generate(
@@ -79,18 +134,19 @@ def greedy_generate(
     )
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
-def _generate_encdec(
+def encdec_generate_with_cache(
     model: EncDecLM,
     params: dict,
     enc_tokens: jax.Array,  # [B, Se]
+    cache: dict,  # model.init_cache(B, max_new + 2, enc_seq=Se)
     max_new: int,
     pad_id: int,
     eos_id: int,
     bos_id: int,
-) -> jax.Array:
+) -> Tuple[jax.Array, dict]:
+    """Shared encdec greedy body; returns (tokens [B, max_new], final cache)."""
     b = enc_tokens.shape[0]
-    cache = model.init_cache(b, max_new + 2)
+    cache = reset_cache(cache)
     bos = jnp.full((b, 1), bos_id, jnp.int32)
     logits, cache = model.prefill(params, bos, cache, enc_tokens=enc_tokens)
     tok0 = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
@@ -105,10 +161,28 @@ def _generate_encdec(
         nxt = jnp.where(done_next, pad_id, nxt)
         return (nxt, cache, done_next), out_tok
 
-    (_, _, _), toks = jax.lax.scan(
+    (_, cache, _), toks = jax.lax.scan(
         step, (tok0, cache, tok0 == eos_id), jnp.arange(max_new)
     )
-    return toks.swapaxes(0, 1)
+    return toks.swapaxes(0, 1), cache
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
+def _generate_encdec(
+    model: EncDecLM,
+    params: dict,
+    enc_tokens: jax.Array,  # [B, Se]
+    max_new: int,
+    pad_id: int,
+    eos_id: int,
+    bos_id: int,
+) -> jax.Array:
+    b, se = enc_tokens.shape
+    cache = model.init_cache(b, max_new + 2, enc_seq=se)
+    toks, _ = encdec_generate_with_cache(
+        model, params, enc_tokens, cache, max_new, pad_id, eos_id, bos_id
+    )
+    return toks
 
 
 def greedy_generate_encdec(

@@ -12,7 +12,7 @@ from repro.kernels.decode_attention import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import gqa_attention_ref
-from repro.kernels.knapsack import knapsack_select_pallas
+from repro.kernels.knapsack import knapsack_select_pallas, knapsack_select_ref
 from repro.kernels.ssd_scan import ssd_scan
 from repro.models.ssm import ssd_chunked, ssd_reference
 
@@ -176,6 +176,10 @@ def test_knapsack_kernel_matches_lax(q, n, budget):
     costs = jnp.asarray(rng.integers(1, budget // 2, (q, n)), jnp.int32)
     a = knapsack_select_pallas(profits, costs, budget)
     b = knapsack_select(profits, costs, budget)
+    # the take-tensor + backtrack oracle is an independent derivation of the
+    # same Algorithm-1 selection — exact match, not just equal value
+    ref = knapsack_select_ref(profits, costs, budget)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ref))
     va = jnp.sum(jnp.where(a, profits, 0), 1)
     vb = jnp.sum(jnp.where(b, profits, 0), 1)
     np.testing.assert_allclose(np.asarray(va), np.asarray(vb), rtol=1e-6)
