@@ -57,6 +57,11 @@ def main() -> None:
         rows += serve_bench.run(
             n_batches=5 if args.fast else 8, batch_size=4,
         )
+        print("\n### traffic scenario (continuous batching under load)")
+        rows += serve_bench.run_scenario(
+            "bursty", n_requests=16 if args.fast else 32,
+            out_path="BENCH_serve_scenario.json",
+        )
 
     if "table1" in selected:
         from benchmarks import table1

@@ -1,19 +1,22 @@
-"""Serving-path benchmark: per-request latency and recompile counts through
-the admission Scheduler, exercising the static-shape fast path end to end
-(bucketed jit dispatch + donated decode caches in serve.dispatch).
+"""Serving-path benchmark: latency and recompile counts through the
+continuous-batching Scheduler, exercising the static-shape fast path end
+to end (bucketed jit dispatch + donated decode caches in serve.dispatch).
 
-Writes ``BENCH_serve.json`` so the perf trajectory accumulates per PR:
+Two modes, both writing ``BENCH_serve.json`` so the perf trajectory
+accumulates per PR:
 
-* ``first_batch_s``   — compile-inclusive latency of the first micro-batch;
-* ``steady_state_s``  — median micro-batch latency once buckets are warm;
-* ``speedup``         — first/steady (the compile tax the fast path removes
-  from every batch after the first);
-* ``compiles_after_first`` / ``compiles_final`` — generate-callable compile
-  counts; equal means zero recompiles in steady state.
+* default — the micro-batch latency probe from PR 2
+  (first/steady-state batch latency, compile counters);
+* ``--scenario steady|bursty|heavy-tail|failure`` — drive the
+  deterministic traffic simulator (:mod:`repro.serve.traffic`) through
+  the deadline-aware Scheduler and report p50/p99 request latency,
+  deadline-miss rate, shed rate, hedge counts, and steady-state
+  recompiles for that scenario.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -24,17 +27,29 @@ from repro import configs
 from repro.core import build_predictor, make_policy
 from repro.data import DEFAULT_POOL, generate_dataset
 from repro.models import build_model
-from repro.serve import EnsembleServer, Scheduler, requests_from_records
+from repro.serve import (
+    AdmissionControl,
+    EnsembleServer,
+    Scheduler,
+    TrafficSimulator,
+    preset_scenarios,
+    requests_from_records,
+)
 
 
-def run(n_batches: int = 8, batch_size: int = 4, budget: float = 0.2,
-        out_path: str = "BENCH_serve.json", log=print):
+def _build_server(budget: float) -> EnsembleServer:
     pred = build_predictor(num_models=len(DEFAULT_POOL))
     pp = pred.init(jax.random.key(0))
     fuser = build_model(configs.get("gen-fuser"))
     fp = fuser.init(jax.random.key(1))
-    server = EnsembleServer(DEFAULT_POOL, make_policy("modi", budget=budget),
-                            pred, pp, fuser, fp)
+    return EnsembleServer(DEFAULT_POOL, make_policy("modi", budget=budget),
+                          pred, pp, fuser, fp)
+
+
+def run(n_batches: int = 8, batch_size: int = 4, budget: float = 0.2,
+        out_path: str = "BENCH_serve.json", log=print):
+    """Micro-batch latency probe (PR 2's metric, kept for trajectory)."""
+    server = _build_server(budget)
     scheduler = Scheduler(server, max_batch_size=batch_size)
 
     records = generate_dataset(n_batches * batch_size, seed=1234)
@@ -83,5 +98,94 @@ def run(n_batches: int = 8, batch_size: int = 4, budget: float = 0.2,
     return rows
 
 
+def run_scenario(scenario_name: str, n_requests: int = 24, batch_size: int = 4,
+                 budget: float = 0.2, max_wait_ticks: int = 2,
+                 admission_budget: float | None = None,
+                 out_path: str = "BENCH_serve.json", log=print):
+    """Scenario mode: simulate one named traffic scenario and report the
+    serving SLO metrics (p50/p99 latency, deadline-miss rate, shed rate)
+    plus steady-state recompile counts."""
+    scenarios = preset_scenarios(n_requests=n_requests)
+    if scenario_name not in scenarios:
+        raise SystemExit(
+            f"unknown scenario {scenario_name!r}; pick from "
+            f"{', '.join(sorted(scenarios))}")
+    scenario = scenarios[scenario_name]
+    server = _build_server(budget)
+    # warm every rung a scheduler batch can land on, so recompiles measure
+    # steady-state behaviour rather than cold-start compiles
+    ladder = server.bucket_ladder
+    rungs = sorted({ladder.batch_bucket(b) for b in range(1, batch_size + 1)})
+    server.warm([(b, server.max_new_tokens) for b in rungs])
+    compiles_after_warm = server.generate_compiles()["total"]
+
+    admission = None
+    if admission_budget is not None:
+        admission = AdmissionControl(window_ticks=max(4, max_wait_ticks * 2),
+                                     downgrade_fraction=admission_budget,
+                                     downgrade_budget=budget / 2,
+                                     shed_fraction=min(1.0, admission_budget * 2))
+    scheduler = Scheduler(server, max_batch_size=batch_size,
+                          max_wait_ticks=max_wait_ticks, admission=admission)
+    records = generate_dataset(max(n_requests, 16), seed=1234)
+    t0 = time.perf_counter()
+    report = TrafficSimulator(scheduler, scenario, records).run()
+    wall = time.perf_counter() - t0
+
+    unresolved = sum(r is None and e is None
+                     for r, e in zip(report.responses, report.errors))
+    compiles_final = report.compiles["total"]
+    result = {
+        "scenario": scenario_name,
+        "n_requests": report.n,
+        "served": report.served,
+        "unresolved_futures": unresolved,  # acceptance: must be 0
+        "ticks": report.ticks,
+        "wall_s": wall,
+        **report.latency_percentiles(),
+        "deadline_miss_rate": report.deadline_miss_rate,
+        "shed_rate": report.shed_rate,
+        "hedges": report.stats["hedges"],
+        "downgraded": report.stats["downgraded"],
+        "dispatched_batches": report.stats["dispatched_batches"],
+        "padded_rows": report.stats["padded_rows"],
+        "compiles_after_warm": compiles_after_warm,
+        "compiles_final": compiles_final,
+        "steady_state_recompiles": compiles_final - compiles_after_warm,
+        "backend": "sim",
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    log(f"wrote {out_path}: scenario={scenario_name} "
+        f"p50={result['p50_latency_s']*1e3:.1f}ms "
+        f"p99={result['p99_latency_s']*1e3:.1f}ms "
+        f"miss_rate={result['deadline_miss_rate']:.2f} "
+        f"shed_rate={result['shed_rate']:.2f} "
+        f"recompiles={result['steady_state_recompiles']}")
+    return [
+        (f"serve_{scenario_name}_p50", result["p50_latency_s"] * 1e6,
+         f"p99={result['p99_latency_s']*1e6:.0f}us "
+         f"miss={result['deadline_miss_rate']:.2f} "
+         f"shed={result['shed_rate']:.2f} "
+         f"recompiles={result['steady_state_recompiles']}"),
+    ]
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", type=str, default=None,
+                    help="traffic scenario: steady, bursty, heavy-tail, failure")
+    ap.add_argument("--n-requests", type=int, default=24)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--budget", type=float, default=0.2)
+    ap.add_argument("--max-wait-ticks", type=int, default=2)
+    ap.add_argument("--admission-budget", type=float, default=None,
+                    help="window downgrade threshold (fraction of full cost)")
+    args = ap.parse_args()
+    if args.scenario:
+        run_scenario(args.scenario, n_requests=args.n_requests,
+                     batch_size=args.batch_size, budget=args.budget,
+                     max_wait_ticks=args.max_wait_ticks,
+                     admission_budget=args.admission_budget)
+    else:
+        run(batch_size=args.batch_size, budget=args.budget)

@@ -34,7 +34,13 @@ from repro.data import (
 )
 from repro.models import build_model
 from repro.optim import AdamW
-from repro.serve import BucketLadder, EnsembleServer, Scheduler, requests_from_records
+from repro.serve import (
+    AdmissionControl,
+    EnsembleServer,
+    RequestShed,
+    Scheduler,
+    requests_from_records,
+)
 from repro.train import repeat_batches, train
 import jax.numpy as jnp
 
@@ -107,6 +113,19 @@ def main():
     ap.add_argument("--online", action="store_true",
                     help="serve one request at a time through the admission Scheduler")
     ap.add_argument("--max-batch-size", type=int, default=4, help="scheduler micro-batch size")
+    ap.add_argument("--max-wait-ticks", type=int, default=4,
+                    help="dispatch a queued request after this many ticks")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="per-request dispatch deadline (EDF batch formation)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="request priority (breaks deadline ties; larger = sooner)")
+    ap.add_argument("--admission-window", type=int, default=8,
+                    help="rolling fleet-budget window, in scheduler ticks")
+    ap.add_argument("--admission-downgrade", type=float, default=None,
+                    help="window cost fraction past which new requests are "
+                         "downgraded to half the per-query budget")
+    ap.add_argument("--admission-shed", type=float, default=None,
+                    help="window cost fraction past which new requests are shed")
     args = ap.parse_args()
 
     recs, scorer, scorer_p, fuser, fuser_p, predictor, pred_p = build_stack(
@@ -122,20 +141,44 @@ def main():
         # micro-batches dispatch before the queue fills, so sizes
         # 1..max_batch_size all occur, and max_batch_size itself may round
         # up to a rung above it
-        ladder = BucketLadder()
-        rungs = sorted({ladder.batch_bucket(b)
+        rungs = sorted({server.bucket_ladder.batch_bucket(b)
                         for b in range(1, args.max_batch_size + 1)})
         server.warm([(b, server.max_new_tokens) for b in rungs])
     batch = generate_dataset(args.n, seed=args.seed + 999)
     if args.online:
-        scheduler = Scheduler(server, max_batch_size=args.max_batch_size)
-        futures = [scheduler.submit(req) for req in requests_from_records(batch)]
+        admission = None
+        if args.admission_downgrade is not None or args.admission_shed is not None:
+            admission = AdmissionControl(
+                window_ticks=args.admission_window,
+                downgrade_fraction=args.admission_downgrade,
+                downgrade_budget=args.budget / 2,
+                shed_fraction=args.admission_shed,
+            )
+        scheduler = Scheduler(server, max_batch_size=args.max_batch_size,
+                              max_wait_ticks=args.max_wait_ticks,
+                              admission=admission)
+        futures = [
+            scheduler.submit(req)
+            for req in requests_from_records(
+                batch, priority=args.priority,
+                deadline_ticks=args.deadline_ticks)
+        ]
         scheduler.flush()
-        out = [f.result() for f in futures]
+        out = []
+        for f in futures:
+            try:
+                out.append(f.result())
+            except RequestShed:
+                out.append(None)
+        shed = sum(r is None for r in out)
+        kept = [(r, rec) for r, rec in zip(out, batch) if r is not None]
+        out = [r for r, _ in kept]
+        batch = [rec for _, rec in kept]
         responses = [r.text for r in out]
         fractions = [r.cost_fraction for r in out]
         masks = [r.mask for r in out]
-        print(f"scheduler: {scheduler.stats}")
+        print(f"scheduler: {scheduler.stats}"
+              + (f"  ({shed} requests shed by admission control)" if shed else ""))
     else:
         result = server.serve(batch)
         responses, fractions, masks = result.responses, result.cost_fraction, result.mask
@@ -143,8 +186,10 @@ def main():
         members = [DEFAULT_POOL[j].name for j in range(len(row)) if row[j]]
         print(f"\nQ: {rec.query}\n   ref: {rec.reference}\n   "
               f"{args.policy}({frac:.0%} cost, {members}): {resp!r}")
+    mean_frac = (f"{np.mean(fractions):.3f}" if fractions is not None and len(fractions)
+                 else "n/a (all requests shed)")
     print("\nstats:", server.stats,
-          f"\nmean cost fraction: {np.mean(fractions):.3f} (budget {args.budget})")
+          f"\nmean cost fraction: {mean_frac} (budget {args.budget})")
 
 
 if __name__ == "__main__":

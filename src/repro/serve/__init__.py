@@ -1,5 +1,12 @@
 from repro.serve.api import EnsembleRequest, EnsembleResponse, requests_from_records
-from repro.serve.backends import LiveLMBackend, LiveMember, MemberBackend, SimBackend
+from repro.serve.backends import (
+    FailureInjector,
+    LiveLMBackend,
+    LiveMember,
+    MemberBackend,
+    MemberFailure,
+    SimBackend,
+)
 from repro.serve.dispatch import (
     BucketLadder,
     DecoderGenerateDispatcher,
@@ -7,24 +14,49 @@ from repro.serve.dispatch import (
 )
 from repro.serve.engine import EnsembleServer, ServeResult
 from repro.serve.generate import greedy_generate, greedy_generate_encdec, prompt_positions
-from repro.serve.scheduler import ResponseFuture, Scheduler
+from repro.serve.scheduler import (
+    AdmissionControl,
+    RequestShed,
+    ResponseFuture,
+    Scheduler,
+)
+from repro.serve.traffic import (
+    ArrivalProcess,
+    Scenario,
+    TrafficReport,
+    TrafficSimulator,
+    build_arrivals,
+    preset_scenarios,
+    replay,
+)
 
 __all__ = [
+    "AdmissionControl",
+    "ArrivalProcess",
     "BucketLadder",
     "DecoderGenerateDispatcher",
     "EncDecGenerateDispatcher",
     "EnsembleRequest",
     "EnsembleResponse",
     "EnsembleServer",
+    "FailureInjector",
     "LiveLMBackend",
     "LiveMember",
     "MemberBackend",
+    "MemberFailure",
+    "RequestShed",
     "ResponseFuture",
+    "Scenario",
     "Scheduler",
     "ServeResult",
     "SimBackend",
+    "TrafficReport",
+    "TrafficSimulator",
+    "build_arrivals",
     "greedy_generate",
     "greedy_generate_encdec",
+    "preset_scenarios",
     "prompt_positions",
+    "replay",
     "requests_from_records",
 ]

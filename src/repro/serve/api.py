@@ -31,6 +31,14 @@ class EnsembleRequest:
     ``policy_kwargs``) overrides the engine's default policy.  ``record``
     carries ground truth for offline evaluation and the behavioural
     simulator; online traffic leaves it ``None``.
+
+    ``priority`` and ``deadline_ticks`` are scheduling hints consumed by
+    the continuous-batching :class:`repro.serve.scheduler.Scheduler`:
+    higher priority breaks ordering ties, and ``deadline_ticks`` is the
+    number of scheduler ticks after arrival by which the request should
+    be dispatched (``None`` = best-effort).  Neither affects *what* the
+    engine answers — only *when* the request is batched — so responses
+    stay byte-identical across scheduling decisions.
     """
 
     query: str
@@ -39,6 +47,8 @@ class EnsembleRequest:
     policy_kwargs: Optional[Dict[str, Any]] = None
     max_new_tokens: Optional[int] = None
     record: Optional[Record] = None
+    priority: int = 0  # larger = more urgent (tie-break within a deadline)
+    deadline_ticks: Optional[int] = None  # dispatch-by, relative to arrival
 
     def resolve_record(self) -> Record:
         """The Record to cost/simulate against (synthesized for online queries)."""

@@ -47,6 +47,20 @@ from repro.serve.generate import greedy_generate
 MaxNewTokens = Union[int, Sequence[int]]
 
 
+class MemberFailure(RuntimeError):
+    """A single pool member's backend call failed mid-batch.
+
+    The engine wraps any exception escaping ``backend.generate(j, ...)``
+    in this type so the Scheduler can tell "one member is down" apart
+    from "the engine itself is broken" and hedge: re-serve the batch with
+    ``member_idx`` excluded instead of failing every sibling future."""
+
+    def __init__(self, member_idx: int, cause: BaseException):
+        super().__init__(f"pool member {member_idx} failed: {cause!r}")
+        self.member_idx = member_idx
+        self.cause = cause
+
+
 def per_row_caps(max_new_tokens: MaxNewTokens, n_rows: int) -> List[int]:
     """Normalize an int-or-sequence token cap to one cap per row."""
     if isinstance(max_new_tokens, int):
@@ -106,6 +120,46 @@ class SimBackend:
             # the row cap without fabricating U+FFFD at the cut point
             out.append(TOKENIZER.decode_capped(TOKENIZER.encode(text), cap))
         return out
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministic failure wrapper around any :class:`MemberBackend`.
+
+    ``failures`` maps a member index to the 0-based *call indices* (that
+    member's n-th ``generate`` call, counted over the backend's lifetime)
+    that raise instead of generating.  Because the schedule is keyed on
+    call counts — not wall time — a traffic-simulator run that injects
+    failures is exactly replayable: same seed, same arrivals, same calls,
+    same faults.  Hedged retries consume call indices like any other
+    call, so a member that fails call 2 can succeed on call 3."""
+
+    inner: MemberBackend
+    failures: Dict[int, Sequence[int]] = dataclasses.field(default_factory=dict)
+    calls: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def num_members(self) -> int:
+        return self.inner.num_members()
+
+    def generate(self, member_idx: int, records: Sequence[Record],
+                 max_new_tokens: MaxNewTokens) -> List[str]:
+        k = self.calls.get(member_idx, 0)
+        self.calls[member_idx] = k + 1
+        if k in tuple(self.failures.get(member_idx, ())):
+            raise RuntimeError(
+                f"injected failure: member {member_idx}, call {k}"
+            )
+        return self.inner.generate(member_idx, records, max_new_tokens)
+
+    # optional-protocol hooks forward to the wrapped backend
+    def warm(self, shapes: Sequence) -> None:
+        warm = getattr(self.inner, "warm", None)
+        if callable(warm):
+            warm(shapes)
+
+    def compiles(self) -> int:
+        compiles = getattr(self.inner, "compiles", None)
+        return compiles() if callable(compiles) else 0
 
 
 @dataclasses.dataclass

@@ -74,6 +74,18 @@ class BucketLadder:
     def batch_bucket(self, b: int) -> int:
         return self._pick(b, self.batch)
 
+    def floor_batch_rung(self, b: int) -> int:
+        """Largest batch rung <= b, for batch *formation* (the Scheduler):
+        dispatching exactly a rung's worth of requests means the padded
+        batch equals the real batch — zero wasted rows.  Falls back to
+        ``b`` itself when every rung is larger (the batch then pads up to
+        ``batch_bucket(b)``, which is still a compiled-once bucket)."""
+        best = 0
+        for r in self.batch:
+            if r <= b:
+                best = r
+        return best or b
+
     def new_bucket(self, n: int) -> int:
         return self._pick(n, self.new_tokens)
 

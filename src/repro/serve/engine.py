@@ -45,7 +45,13 @@ from repro.data.mixinstruct import PoolMemberSpec, Record, query_cost_matrix
 from repro.data.tokenizer import TOKENIZER
 from repro.models.encdec import EncDecLM
 from repro.serve.api import EnsembleRequest, EnsembleResponse, requests_from_records
-from repro.serve.backends import LiveLMBackend, LiveMember, MemberBackend, SimBackend
+from repro.serve.backends import (
+    LiveLMBackend,
+    LiveMember,
+    MemberBackend,
+    MemberFailure,
+    SimBackend,
+)
 from repro.serve.dispatch import BucketLadder, EncDecGenerateDispatcher
 from repro.serve.generate import greedy_generate_encdec
 
@@ -88,6 +94,9 @@ class EnsembleServer:
         self.fuser = fuser
         self.fuser_params = fuser_params
         ladder = bucket_ladder or BucketLadder()
+        # the Scheduler reads this to target batch sizes that land on
+        # already-compiled rungs (continuous batch formation)
+        self.bucket_ladder = ladder
         if backend is None:
             if live_members is not None:
                 backend = LiveLMBackend(list(live_members), max_query_len=max_query_len,
@@ -213,12 +222,43 @@ class EnsembleServer:
             rows = np.flatnonzero(mask[:, j])
             if rows.size == 0:
                 continue
-            texts = self.backend.generate(
-                j, [records[i] for i in rows], [max_new_per_row[i] for i in rows]
-            )
+            try:
+                texts = self.backend.generate(
+                    j, [records[i] for i in rows], [max_new_per_row[i] for i in rows]
+                )
+            except MemberFailure:
+                raise
+            except Exception as exc:
+                # attribute the fault to the member so the Scheduler can
+                # hedge onto the survivors instead of failing the batch
+                raise MemberFailure(j, exc) from exc
             for i, text in zip(rows, texts):
                 out[i][j] = text
         return out
+
+    def _apply_exclusions(self, mask: np.ndarray, costs: np.ndarray,
+                          exclude_members: frozenset) -> np.ndarray:
+        """Zero excluded members out of the selection; rows left empty fall
+        back to the cheapest *surviving* member so every query still gets
+        an answer (the same guard ModiPolicy applies for an over-tight ε).
+        Used by the Scheduler's hedged retry after a MemberFailure."""
+        excl = sorted(exclude_members)
+        if not excl:
+            return mask
+        n = mask.shape[1]
+        if not all(0 <= j < n for j in excl):
+            raise ValueError(f"exclude_members {excl} out of range for pool of {n}")
+        if len(excl) >= n:
+            raise ValueError("cannot exclude every pool member")
+        mask = mask.copy()
+        mask[:, excl] = False
+        empty = ~mask.any(axis=1)
+        if empty.any():
+            alive_costs = costs.copy()
+            alive_costs[:, excl] = np.inf
+            cheapest = np.argmin(alive_costs, axis=1)
+            mask[np.flatnonzero(empty), cheapest[empty]] = True
+        return mask
 
     def _fuse(self, queries: List[str], member_out: List[List[Optional[str]]],
               mask: np.ndarray, max_new: int) -> np.ndarray:
@@ -253,8 +293,18 @@ class EnsembleServer:
         )
 
     # ------------------------------------------------------------------
-    def serve_requests(self, requests: List[EnsembleRequest]) -> List[EnsembleResponse]:
-        """Serve one admission micro-batch of requests (the Scheduler's path)."""
+    def serve_requests(
+        self,
+        requests: List[EnsembleRequest],
+        exclude_members: frozenset = frozenset(),
+    ) -> List[EnsembleResponse]:
+        """Serve one admission micro-batch of requests (the Scheduler's path).
+
+        ``exclude_members`` drops those pool members from every request's
+        selection *after* the policy runs (hedged retry around a down
+        member); requests whose selection never touched the excluded
+        members produce byte-identical responses with or without the
+        exclusion."""
         if not requests:
             return []
         t_start = time.perf_counter()
@@ -268,6 +318,8 @@ class EnsembleServer:
         costs = query_cost_matrix(self.pool, records)
         t0 = time.perf_counter()
         mask, policy_names = self._select(requests, r_hat, costs)
+        if exclude_members:
+            mask = self._apply_exclusions(mask, costs, frozenset(exclude_members))
         t_select = time.perf_counter() - t0
 
         max_new_per_row = [
@@ -312,10 +364,12 @@ class EnsembleServer:
         return responses
 
     # ------------------------------------------------------------------
-    def serve(self, records: List[Record]) -> ServeResult:
+    def serve(self, records: List[Record],
+              exclude_members: frozenset = frozenset()) -> ServeResult:
         """Offline batch entry point: one micro-batch over all records."""
         n = len(self.pool)
-        out = self.serve_requests(requests_from_records(records))
+        out = self.serve_requests(requests_from_records(records),
+                                  exclude_members=exclude_members)
         if not out:
             return ServeResult(
                 responses=[],

@@ -1,50 +1,100 @@
-"""Admission scheduler: coalesces individual requests into micro-batches.
+"""Continuous-batching admission frontend over an :class:`EnsembleServer`.
 
-Online traffic arrives one :class:`EnsembleRequest` at a time;
-``submit()`` enqueues the request and returns a :class:`ResponseFuture`
-immediately.  A micro-batch is dispatched to the engine when
+Online traffic arrives one :class:`EnsembleRequest` at a time; ``submit()``
+enqueues the request and returns a :class:`ResponseFuture` immediately.
+Beyond the micro-batch coalescing of the original FIFO scheduler, this
+frontend is deadline- and budget-aware:
 
-* the queue reaches ``max_batch_size`` (dispatched inline from
-  ``submit``), or
-* a queued request has waited ``max_wait_ticks`` logical ticks
-  (``tick()`` is the caller's clock — one call per poll/step), or
-* the caller forces it (``flush()``, or ``ResponseFuture.result()`` on a
-  still-pending request).
+* **EDF batch formation** — pending requests order by
+  ``(absolute deadline, -priority, arrival)``; batches are formed from
+  requests sharing a *policy group* (the engine's ``_policy_key``), so
+  every dispatched micro-batch runs one vectorized ``select``.  Batch
+  sizes snap to the :class:`~repro.serve.dispatch.BucketLadder`'s rungs —
+  dispatching exactly a rung's worth means the fast path pads by zero
+  rows and hits a bucket that is already compiled.
+* **Dispatch triggers** — a policy group reaching ``max_batch_size``
+  dispatches inline from ``submit``; ``tick()`` (the caller's logical
+  clock) dispatches any request that has aged past ``max_wait_ticks`` or
+  whose deadline is due; ``flush()`` drains everything;
+  ``ResponseFuture.result()`` dispatches *only the batches up to and
+  including the one containing that future* — it never force-flushes
+  other submitters' young requests.
+* **Admission control** — the paper's per-query ε-constraint lifted to a
+  rolling per-window fleet budget: realized cost (from
+  ``EnsembleResponse.realized_cost``) over the last ``window_ticks`` is
+  compared to the full-ensemble cost of the same window; past the soft
+  threshold new requests are *downgraded* to a tighter per-request
+  budget, past the hard threshold they are *shed* (their future raises
+  :class:`RequestShed` — resolved, never hung).
+* **Hedged retry** — when a :class:`~repro.serve.backends.MemberFailure`
+  escapes the engine mid-batch, the batch is re-served with the failed
+  member excluded (``serve_requests(..., exclude_members=...)``) instead
+  of failing every sibling future.  Generation is deterministic and
+  side-effect-free per call, so the retry is exact, and requests that
+  never selected the failed member get byte-identical responses.
 
 Because the engine's request path is deterministic per request (see
-``SimBackend``), a stream served one-at-a-time through the scheduler
-produces byte-identical fused responses to one big offline
-``EnsembleServer.serve`` call over the same records — the property
-``tests/test_serve_api.py`` pins down.
+``SimBackend``) and batch-position-invariant, a stream served through
+this scheduler — under any batching, deadlines, or hedging — produces
+byte-identical fused responses to one offline ``EnsembleServer.serve``
+call over the same records (``tests/test_traffic_scenarios.py``).
+
+``events`` records every arrival / dispatch / completion / shed / hedge /
+deadline-miss as a flat dict — the replayable trace the traffic
+simulator (:mod:`repro.serve.traffic`) builds its reports from.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import hashlib
+from typing import Dict, List, Optional, Tuple
 
 from repro.serve.api import EnsembleRequest, EnsembleResponse
+from repro.serve.backends import MemberFailure
+from repro.serve.dispatch import BucketLadder
 from repro.serve.engine import EnsembleServer
+
+_NO_DEADLINE = float("inf")
+
+
+class RequestShed(RuntimeError):
+    """Raised by ``ResponseFuture.result()`` when admission control shed
+    the request (fleet-level cost budget exceeded)."""
+
+
+def _digest(text: str) -> str:
+    return hashlib.blake2b(text.encode("utf-8", errors="replace"),
+                           digest_size=8).hexdigest()
 
 
 class ResponseFuture:
     """Handle for a submitted request; resolves when its batch is served."""
 
-    def __init__(self, scheduler: "Scheduler"):
+    def __init__(self, scheduler: "Scheduler", seq: int):
         self._scheduler = scheduler
+        self.seq = seq  # arrival sequence number (the trace's request id)
         self._response: Optional[EnsembleResponse] = None
         self._error: Optional[BaseException] = None
         self._done = False
+        self.deadline_missed = False  # dispatched after its deadline tick
 
     def done(self) -> bool:
         return self._done
 
-    def result(self) -> EnsembleResponse:
-        """The response, flushing the scheduler if still queued.
+    def shed(self) -> bool:
+        return isinstance(self._error, RequestShed)
 
-        Raises the engine's exception if this request's micro-batch failed."""
+    def result(self) -> EnsembleResponse:
+        """The response, dispatching this future's own batch if pending.
+
+        Only batches up to and including the one containing this request
+        are dispatched — other policy groups and younger same-group
+        requests stay queued for their own triggers.  Raises the engine's
+        exception if the batch failed, or :class:`RequestShed` if
+        admission control dropped the request."""
         if not self._done:
-            self._scheduler.flush()
+            self._scheduler._dispatch_for(self)
         if self._error is not None:
             raise self._error
         assert self._response is not None
@@ -59,59 +109,180 @@ class ResponseFuture:
         self._done = True
 
 
+@dataclasses.dataclass(frozen=True)
+class AdmissionControl:
+    """Rolling fleet-level ε: per-window realized/full cost thresholds.
+
+    Over the trailing ``window_ticks`` scheduler ticks, the realized
+    member cost of every served request is summed against the
+    full-ensemble (LLM-BLENDER) cost of the same requests — the same
+    fraction the per-query ε constrains, lifted to the fleet.  When the
+    window fraction reaches ``downgrade_fraction``, newly submitted
+    requests have their per-request budget tightened to
+    ``downgrade_budget``; at ``shed_fraction`` they are shed outright.
+    ``None`` disables a threshold."""
+
+    window_ticks: int = 8
+    downgrade_fraction: Optional[float] = None  # soft: tighten request budgets
+    downgrade_budget: float = 0.1  # ε applied to downgraded requests
+    shed_fraction: Optional[float] = None  # hard: reject new requests
+
+
 @dataclasses.dataclass
 class _Pending:
     request: EnsembleRequest
     future: ResponseFuture
+    key: Tuple  # engine policy-group key
+    seq: int
+    arrive_tick: int
+    deadline_tick: Optional[int]  # absolute (arrival + deadline_ticks)
+    priority: int
     age_ticks: int = 0
+
+    def edf_key(self) -> Tuple[float, int, int]:
+        d = _NO_DEADLINE if self.deadline_tick is None else self.deadline_tick
+        return (d, -self.priority, self.seq)
 
 
 class Scheduler:
-    """Micro-batching front-end over an :class:`EnsembleServer`."""
+    """Deadline-aware continuous-batching front-end over an EnsembleServer."""
 
     def __init__(self, server: EnsembleServer, max_batch_size: int = 8,
-                 max_wait_ticks: int = 4):
+                 max_wait_ticks: int = 4,
+                 admission: Optional[AdmissionControl] = None,
+                 ladder: Optional[BucketLadder] = None,
+                 hedge: bool = True, record_events: bool = True):
         if max_batch_size < 1:
             raise ValueError("max_batch_size must be >= 1")
         self.server = server
         self.max_batch_size = max_batch_size
         self.max_wait_ticks = max_wait_ticks
+        self.admission = admission
+        self.ladder = ladder or getattr(server, "bucket_ladder", None) or BucketLadder()
+        self.hedge = hedge
+        self.record_events = record_events
+        self.now = 0
+        self._seq = 0
+        self.last_submitted: Optional[ResponseFuture] = None
         self._queue: List[_Pending] = []
-        self.stats = {"submitted": 0, "dispatched_batches": 0, "dispatched_requests": 0}
+        # (tick, realized_flops, full_ensemble_flops) per served request —
+        # the admission window's ledger
+        self._ledger: List[Tuple[int, float, float]] = []
+        self.events: List[dict] = []
+        self.stats = {
+            "submitted": 0, "dispatched_batches": 0, "dispatched_requests": 0,
+            "shed": 0, "downgraded": 0, "deadline_misses": 0,
+            "hedges": 0, "hedged_requests": 0, "padded_rows": 0,
+        }
+
+    # ------------------------------------------------------------------
+    def _event(self, event: str, **fields) -> None:
+        if self.record_events:
+            self.events.append({"tick": self.now, "event": event, **fields})
+
+    # -- admission window ----------------------------------------------
+    def _window_ticks(self) -> int:
+        return self.admission.window_ticks if self.admission else self.max_wait_ticks
+
+    def window_cost_fraction(self) -> float:
+        """Realized/full-ensemble cost over the trailing admission window."""
+        floor = self.now - self._window_ticks()
+        realized = full = 0.0
+        for tick, r, f in self._ledger:
+            if tick > floor:
+                realized += r
+                full += f
+        return realized / full if full > 0 else 0.0
+
+    def _admit(self, request: EnsembleRequest,
+               future: ResponseFuture) -> Optional[EnsembleRequest]:
+        """Admission decision: the request (possibly downgraded), or None
+        if it was shed (the future is then already resolved)."""
+        ac = self.admission
+        if ac is None:
+            return request
+        frac = self.window_cost_fraction()
+        if ac.shed_fraction is not None and frac >= ac.shed_fraction:
+            self.stats["shed"] += 1
+            self._event("shed", req=future.seq, window_fraction=frac)
+            future._fail(RequestShed(
+                f"admission window at {frac:.2f} of full-ensemble cost "
+                f"(>= shed threshold {ac.shed_fraction:.2f})"
+            ))
+            return None
+        if (ac.downgrade_fraction is not None and frac >= ac.downgrade_fraction
+                and (request.budget is None or request.budget > ac.downgrade_budget)):
+            self.stats["downgraded"] += 1
+            self._event("downgrade", req=future.seq, window_fraction=frac,
+                        budget=ac.downgrade_budget)
+            return dataclasses.replace(request, budget=ac.downgrade_budget)
+        return request
 
     # ------------------------------------------------------------------
     def submit(self, request: EnsembleRequest) -> ResponseFuture:
-        """Enqueue one request; dispatches inline once a full batch forms.
+        """Enqueue one request; dispatches inline once a policy group fills.
 
         The request's policy override is fully resolved here (name, kwargs,
         budget), so a malformed request is rejected before it can poison a
         micro-batch shared with other submitters."""
+        self.last_submitted: Optional[ResponseFuture] = None
         key = self.server._policy_key(request)
         hash(key)  # unhashable policy_kwargs values would break grouping
         self.server._build_policy(key)  # raises on unknown name / bad kwargs
-        future = ResponseFuture(self)
-        self._queue.append(_Pending(request, future))
+        future = ResponseFuture(self, self._seq)
+        # recoverable by the caller even if an inline dispatch below raises
+        # (the batch's futures are resolved with the cause, but submit then
+        # propagates before returning the handle)
+        self.last_submitted = future
+        self._seq += 1
         self.stats["submitted"] += 1
-        while len(self._queue) >= self.max_batch_size:
-            self._dispatch(self.max_batch_size)
+        admitted = self._admit(request, future)
+        if admitted is None:
+            return future  # shed: resolved with RequestShed, never queued
+        if admitted is not request:
+            key = self.server._policy_key(admitted)  # downgrade moved the group
+        deadline = (None if admitted.deadline_ticks is None
+                    else self.now + admitted.deadline_ticks)
+        self._queue.append(_Pending(
+            request=admitted, future=future, key=key, seq=future.seq,
+            arrive_tick=self.now, deadline_tick=deadline,
+            priority=admitted.priority,
+        ))
+        self._event("arrive", req=future.seq, key=repr(key),
+                    deadline=deadline, priority=admitted.priority)
+        while True:
+            group = self._largest_group()
+            if len(group) < self.max_batch_size:
+                break
+            self._dispatch_group(group, forced=self.max_batch_size)
         return future
 
     def tick(self) -> int:
-        """Advance the logical clock; dispatch batches that waited too long.
-
-        Returns the number of requests dispatched this tick."""
+        """Advance the logical clock; dispatch every request that has aged
+        past ``max_wait_ticks`` or whose deadline tick is due.  Returns the
+        number of requests dispatched this tick."""
+        self.now += 1
         for p in self._queue:
             p.age_ticks += 1
         served = 0
-        while self._queue and self._queue[0].age_ticks >= self.max_wait_ticks:
-            served += self._dispatch(self.max_batch_size)
+        while True:
+            urgent = [p for p in self._queue if self._urgent(p)]
+            if not urgent:
+                break
+            head = min(urgent, key=_Pending.edf_key)
+            group = self._group(head.key)
+            forced = sum(self._urgent(p) for p in group[:self.max_batch_size])
+            served += self._dispatch_group(group, forced=max(forced, 1))
         return served
 
     def flush(self) -> int:
-        """Dispatch everything queued, regardless of age or batch size."""
+        """Dispatch everything queued, regardless of age, deadline, or rung."""
         served = 0
         while self._queue:
-            served += self._dispatch(self.max_batch_size)
+            head = min(self._queue, key=_Pending.edf_key)
+            group = self._group(head.key)
+            served += self._dispatch_group(
+                group, forced=min(len(group), self.max_batch_size))
         return served
 
     @property
@@ -119,20 +290,111 @@ class Scheduler:
         return len(self._queue)
 
     # ------------------------------------------------------------------
-    def _dispatch(self, limit: int) -> int:
-        batch, self._queue = self._queue[:limit], self._queue[limit:]
-        if not batch:
+    def _urgent(self, p: _Pending) -> bool:
+        if p.age_ticks >= self.max_wait_ticks:
+            return True
+        return p.deadline_tick is not None and p.deadline_tick <= self.now
+
+    def _group(self, key: Tuple) -> List[_Pending]:
+        """The pending requests of one policy group, in EDF order."""
+        return sorted((p for p in self._queue if p.key == key),
+                      key=_Pending.edf_key)
+
+    def _largest_group(self) -> List[_Pending]:
+        counts: Dict[Tuple, int] = {}
+        for p in self._queue:
+            counts[p.key] = counts.get(p.key, 0) + 1
+        if not counts:
+            return []
+        key = max(counts, key=lambda k: counts[k])
+        return self._group(key)
+
+    def _dispatch_for(self, future: ResponseFuture) -> None:
+        """Dispatch batches from this future's policy group — in EDF order,
+        so same-group requests ahead of it ride along — until the batch
+        containing it has been served.  Other groups are left queued."""
+        while not future.done():
+            entry = next((p for p in self._queue if p.future is future), None)
+            if entry is None:  # resolved concurrently or never queued
+                break
+            group = self._group(entry.key)
+            ahead = group.index(entry) + 1  # everything up to and incl. it
+            self._dispatch_group(group, forced=min(ahead, self.max_batch_size))
+
+    # ------------------------------------------------------------------
+    def _take_count(self, available: int, forced: int) -> int:
+        """How many of a group's EDF-ordered candidates to dispatch.
+
+        Snap down to the largest bucket-ladder rung <= available so the
+        fast path pads by zero rows — unless that would strand a request
+        that must go now (``forced``), in which case take all forced
+        requests and pad up to the enclosing (still pre-compiled) rung."""
+        available = min(available, self.max_batch_size)
+        forced = min(forced, available)
+        if available == self.ladder.batch_bucket(available):
+            return available  # already exactly on a rung
+        return max(self.ladder.floor_batch_rung(available), forced, 1)
+
+    def _dispatch_group(self, group: List[_Pending], forced: int) -> int:
+        """Serve the front of one policy group; returns requests served."""
+        if not group:
             return 0
-        try:
-            responses = self.server.serve_requests([p.request for p in batch])
-        except Exception as exc:
-            # the batch is already popped; resolve every sibling future with
-            # the cause instead of leaving them pending forever
-            for p in batch:
-                p.future._fail(exc)
-            raise
+        take = self._take_count(len(group), forced)
+        batch = group[:take]
+        members = set(id(p) for p in batch)
+        self._queue = [p for p in self._queue if id(p) not in members]
+        exclude: frozenset = frozenset()
+        reqs = [p.request for p in batch]
+        while True:
+            try:
+                if exclude:
+                    responses = self.server.serve_requests(
+                        reqs, exclude_members=exclude)
+                else:
+                    responses = self.server.serve_requests(reqs)
+                break
+            except MemberFailure as mf:
+                pool_n = self.server.backend.num_members()
+                if not self.hedge or len(exclude) + 1 >= pool_n:
+                    for p in batch:
+                        p.future._fail(mf)
+                    raise
+                exclude = exclude | {mf.member_idx}
+                self.stats["hedges"] += 1
+                self.stats["hedged_requests"] += len(batch)
+                self._event("hedge", member=mf.member_idx,
+                            reqs=[p.seq for p in batch],
+                            exclude=sorted(exclude))
+            except Exception as exc:
+                # the batch is already popped; resolve every sibling future
+                # with the cause instead of leaving them pending forever
+                for p in batch:
+                    p.future._fail(exc)
+                raise
+        self._event("dispatch", reqs=[p.seq for p in batch], size=len(batch),
+                    bucket=self.ladder.batch_bucket(len(batch)),
+                    exclude=sorted(exclude))
+        self.stats["padded_rows"] += (
+            self.ladder.batch_bucket(len(batch)) - len(batch))
         for p, response in zip(batch, responses):
             p.future._set(response)
+            missed = (p.deadline_tick is not None and self.now > p.deadline_tick)
+            if missed:
+                p.future.deadline_missed = True
+                self.stats["deadline_misses"] += 1
+                self._event("miss", req=p.seq, deadline=p.deadline_tick)
+            # full-ensemble cost backed out of the realized fraction keeps
+            # the ledger exact for any policy without a second cost pass
+            full = (response.realized_cost / response.cost_fraction
+                    if response.cost_fraction > 0 else 0.0)
+            self._ledger.append((self.now, response.realized_cost, full))
+            self._event("complete", req=p.seq,
+                        latency_ticks=self.now - p.arrive_tick,
+                        missed=missed, text_digest=_digest(response.text))
         self.stats["dispatched_batches"] += 1
         self.stats["dispatched_requests"] += len(batch)
+        # entries older than the window can never matter again — prune so
+        # the ledger stays O(window), not O(session)
+        floor = self.now - self._window_ticks()
+        self._ledger = [e for e in self._ledger if e[0] > floor]
         return len(batch)

@@ -1,0 +1,316 @@
+"""Deterministic, seed-driven traffic simulator for the serving stack.
+
+Discrete-event load generator over the continuous-batching
+:class:`~repro.serve.scheduler.Scheduler`: a :class:`Scenario` describes
+an arrival process (steady / bursty / heavy-tail), a weighted mix of
+per-request overrides (policy, budget, priority, deadline), and an
+optional failure-injection schedule; :class:`TrafficSimulator` drives the
+scheduler tick-by-tick and returns a :class:`TrafficReport` with
+per-request latencies, deadline-miss and shed counters, and the
+scheduler's full event trace.
+
+Everything is deterministic given ``Scenario.seed``: arrival ticks, mix
+draws, simulated member responses (``SimBackend`` keys its RNG on the
+query, not the batch), and injected failures (keyed on per-member call
+counts, not wall time).  Two runs of the same scenario produce identical
+traces — ``TrafficReport.trace`` is replayable byte for byte — and the
+fused responses are byte-identical to one offline
+``EnsembleServer.serve_requests`` call over the same requests, which is
+what ``tests/test_traffic_scenarios.py`` pins.
+
+The simulator is both the load generator behind
+``benchmarks/serve_bench.py --scenario ...`` and the engine of the
+scenario test suite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.mixinstruct import Record
+from repro.serve.api import EnsembleRequest, EnsembleResponse
+from repro.serve.backends import FailureInjector
+from repro.serve.scheduler import Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """When requests arrive, in scheduler ticks.
+
+    * ``steady`` — ``rate`` requests per tick, evenly spaced
+      (request *i* arrives at tick ``floor(i / rate)``).
+    * ``bursty`` — bursts of ``burst_size`` requests every
+      ``burst_every`` ticks, nothing in between.
+    * ``heavy-tail`` — inter-arrival gaps drawn from a Pareto
+      distribution (shape ``tail_shape``, clamped at ``tail_cap``):
+      long quiet stretches punctured by arrival clumps.
+    """
+
+    kind: str = "steady"
+    rate: float = 1.0
+    burst_size: int = 8
+    burst_every: int = 8
+    tail_shape: float = 1.2
+    tail_cap: int = 32
+
+    def arrival_ticks(self, n: int, rng: np.random.Generator) -> List[int]:
+        if self.kind == "steady":
+            return [int(i / self.rate) for i in range(n)]
+        if self.kind == "bursty":
+            return [(i // self.burst_size) * self.burst_every for i in range(n)]
+        if self.kind == "heavy-tail":
+            ticks, t = [], 0
+            for _ in range(n):
+                ticks.append(t)
+                t += min(int(rng.pareto(self.tail_shape)), self.tail_cap)
+            return ticks
+        raise ValueError(
+            f"unknown arrival kind {self.kind!r}; "
+            "expected 'steady', 'bursty', or 'heavy-tail'"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One reproducible traffic scenario.
+
+    ``mix`` is a weighted tuple of request-override dicts (any subset of
+    ``budget`` / ``policy`` / ``policy_kwargs`` / ``priority`` /
+    ``deadline_ticks`` / ``max_new_tokens``); each arrival draws one
+    entry.  ``deadline_ticks`` is the default deadline for requests whose
+    mix entry does not set its own.  ``failures`` maps a pool member to
+    the 0-based call indices that raise (see
+    :class:`~repro.serve.backends.FailureInjector`)."""
+
+    name: str
+    arrivals: ArrivalProcess = ArrivalProcess()
+    n_requests: int = 24
+    seed: int = 0
+    mix: Tuple[Tuple[float, Mapping[str, Any]], ...] = ()
+    deadline_ticks: Optional[int] = None
+    failures: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
+
+
+def build_arrivals(scenario: Scenario,
+                   records: Sequence[Record]) -> List[Tuple[int, EnsembleRequest]]:
+    """The scenario's deterministic arrival schedule: (tick, request) pairs,
+    non-decreasing in tick.  Records cycle in order, so request *i* always
+    carries ``records[i % len(records)]`` — the offline-equivalence tests
+    rely on this mapping."""
+    if not records:
+        raise ValueError("need at least one record to build traffic from")
+    rng = np.random.default_rng(scenario.seed)
+    ticks = scenario.arrivals.arrival_ticks(scenario.n_requests, rng)
+    weights = np.asarray([w for w, _ in scenario.mix], np.float64)
+    if scenario.mix:
+        weights = weights / weights.sum()
+    out = []
+    for i, tick in enumerate(ticks):
+        overrides: Dict[str, Any] = {}
+        if scenario.mix:
+            overrides = dict(scenario.mix[int(rng.choice(len(scenario.mix),
+                                                         p=weights))][1])
+        if "deadline_ticks" not in overrides and scenario.deadline_ticks is not None:
+            overrides["deadline_ticks"] = scenario.deadline_ticks
+        rec = records[i % len(records)]
+        out.append((tick, EnsembleRequest(query=rec.query, record=rec, **overrides)))
+    return out
+
+
+@dataclasses.dataclass
+class TrafficReport:
+    """What one simulated run produced, in arrival order."""
+
+    scenario: str
+    requests: List[EnsembleRequest]
+    responses: List[Optional[EnsembleResponse]]  # None where shed/failed
+    errors: List[Optional[BaseException]]
+    latency_ticks: List[Optional[int]]  # dispatch tick - arrival tick
+    wall_latency_s: List[Optional[float]]
+    deadline_missed: List[bool]
+    trace: List[dict]  # the scheduler's deterministic event log
+    stats: Dict[str, int]  # scheduler counters at end of run
+    compiles: Dict[str, int]  # engine generate-compile counters
+    ticks: int  # total scheduler ticks consumed
+
+    # -- summary metrics -------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self.requests)
+
+    @property
+    def served(self) -> int:
+        return sum(r is not None for r in self.responses)
+
+    @property
+    def shed_rate(self) -> float:
+        return self.stats.get("shed", 0) / max(self.n, 1)
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        return sum(self.deadline_missed) / max(self.n, 1)
+
+    def latency_percentiles(self, qs=(50, 99)) -> Dict[str, float]:
+        """p50/p99 (by default) over wall-clock and tick latencies of the
+        served requests."""
+        walls = [w for w in self.wall_latency_s if w is not None]
+        ticks = [t for t in self.latency_ticks if t is not None]
+        out: Dict[str, float] = {}
+        for q in qs:
+            out[f"p{q}_latency_s"] = float(np.percentile(walls, q)) if walls else 0.0
+            out[f"p{q}_latency_ticks"] = (
+                float(np.percentile(ticks, q)) if ticks else 0.0)
+        return out
+
+
+class TrafficSimulator:
+    """Drives a Scheduler through one Scenario, tick by tick."""
+
+    def __init__(self, scheduler: Scheduler, scenario: Scenario,
+                 records: Sequence[Record]):
+        self.scheduler = scheduler
+        self.scenario = scenario
+        self.records = list(records)
+        if scenario.failures:
+            # always wrap fresh around the innermost backend: a reused
+            # server keeps neither a previous scenario's schedule nor its
+            # consumed call counters, so replay() stays byte-identical
+            backend = scheduler.server.backend
+            if isinstance(backend, FailureInjector):
+                backend = backend.inner
+            scheduler.server.backend = FailureInjector(
+                backend, failures={m: tuple(calls)
+                                   for m, calls in scenario.failures})
+
+    def run(self, max_idle_ticks: int = 1000) -> TrafficReport:
+        """Submit the arrival schedule against the scheduler's clock and
+        tick until every future resolves.  Engine-side batch failures are
+        recorded per request (futures are always resolved), never raised —
+        a scenario run always completes."""
+        sched = self.scheduler
+        arrivals = build_arrivals(self.scenario, self.records)
+        futures: List = []
+        submit_s: List[float] = []
+        done_s: List[Optional[float]] = []
+        requests = [req for _, req in arrivals]
+
+        def stamp():
+            t = time.perf_counter()
+            for i, f in enumerate(futures):
+                if f.done() and done_s[i] is None:
+                    done_s[i] = t
+
+        idx = 0
+        idle = 0
+        while idx < len(arrivals) or sched.pending:
+            while idx < len(arrivals) and arrivals[idx][0] <= sched.now:
+                submit_s.append(time.perf_counter())
+                done_s.append(None)
+                try:
+                    futures.append(sched.submit(arrivals[idx][1]))
+                except Exception:
+                    # an inline dispatch crashed past hedging: the batch's
+                    # futures (possibly including ours) are resolved with
+                    # the cause; recover the handle so the report still
+                    # accounts for this request
+                    if sched.last_submitted is None:
+                        raise  # validation error — a sim bug, surface it
+                    futures.append(sched.last_submitted)
+                idx += 1
+                stamp()
+            before = sched.pending
+            try:
+                sched.tick()
+            except Exception:
+                pass  # batch futures already resolved with the cause
+            stamp()
+            idle = idle + 1 if sched.pending == before and idx >= len(arrivals) else 0
+            if idle > max_idle_ticks:
+                raise RuntimeError(
+                    f"simulator failed to drain: {sched.pending} requests "
+                    f"still pending after {max_idle_ticks} idle ticks")
+        stamp()
+
+        latency_ticks: List[Optional[int]] = [None] * len(futures)
+        missed = [False] * len(futures)
+        seq_to_i = {f.seq: i for i, f in enumerate(futures)}
+        for ev in sched.events:
+            if ev["event"] == "complete" and ev["req"] in seq_to_i:
+                i = seq_to_i[ev["req"]]
+                latency_ticks[i] = ev["latency_ticks"]
+                missed[i] = ev["missed"]
+        responses: List[Optional[EnsembleResponse]] = []
+        errors: List[Optional[BaseException]] = []
+        walls: List[Optional[float]] = []
+        for i, f in enumerate(futures):
+            err = f._error
+            responses.append(f._response if err is None else None)
+            errors.append(err)
+            walls.append(done_s[i] - submit_s[i]
+                         if err is None and done_s[i] is not None else None)
+        return TrafficReport(
+            scenario=self.scenario.name,
+            requests=requests,
+            responses=responses,
+            errors=errors,
+            latency_ticks=latency_ticks,
+            wall_latency_s=walls,
+            deadline_missed=missed,
+            trace=list(sched.events),
+            stats=dict(sched.stats),
+            compiles=sched.server.generate_compiles(),
+            ticks=sched.now,
+        )
+
+
+def replay(scheduler_factory, scenario: Scenario,
+           records: Sequence[Record]) -> TrafficReport:
+    """Re-run a scenario from scratch on a fresh scheduler.  Because every
+    source of variation is seed-keyed, the returned report's trace is
+    byte-identical to the original run's."""
+    return TrafficSimulator(scheduler_factory(), scenario, records).run()
+
+
+def preset_scenarios(n_requests: int = 24, seed: int = 0) -> Dict[str, Scenario]:
+    """The four named scenarios the benchmarks and the scenario test suite
+    share.  ``failure`` injects a transient fault on member 3 (one of the
+    two members modi@0.2 reliably selects under the default stack seeds),
+    so hedged retry actually fires; every future still resolves."""
+    return {
+        "steady": Scenario(
+            name="steady",
+            arrivals=ArrivalProcess("steady", rate=2.0),
+            n_requests=n_requests, seed=seed, deadline_ticks=4,
+        ),
+        "bursty": Scenario(
+            name="bursty",
+            arrivals=ArrivalProcess("bursty", burst_size=8, burst_every=6),
+            n_requests=n_requests, seed=seed, deadline_ticks=3,
+            mix=(
+                (0.7, {}),
+                (0.2, {"budget": 0.5, "priority": 1}),
+                (0.1, {"policy": "best-single", "priority": 2,
+                       "deadline_ticks": 1}),
+            ),
+        ),
+        "heavy-tail": Scenario(
+            name="heavy-tail",
+            arrivals=ArrivalProcess("heavy-tail", tail_shape=1.1),
+            n_requests=n_requests, seed=seed, deadline_ticks=6,
+            mix=(
+                (0.6, {}),
+                (0.3, {"budget": 0.6}),
+                (0.1, {"policy": "llm-blender", "priority": 3}),
+            ),
+        ),
+        "failure": Scenario(
+            name="failure",
+            arrivals=ArrivalProcess("steady", rate=2.0),
+            n_requests=n_requests, seed=seed, deadline_ticks=4,
+            failures=((3, (1,)),),
+        ),
+    }

@@ -1,0 +1,93 @@
+"""Golden-file pin of knapsack tie-breaking across an ε/budget grid.
+
+Algorithm 1's backtrack resolves DP ties with the *ties-keep-not-taken*
+rule, and which side of a tie a member lands on changes the selection —
+silently, if nothing pins it.  This test freezes the exact selections of
+``select_under_budget`` over a grid of ε fractions × bucket counts, on
+inputs engineered for ties (integer profits, repeated integer costs), for
+BOTH DP backends (``impl="lax"`` and ``impl="pallas"``): a future kernel
+rewrite that shifts any tie breaks the diff here, not in production.
+
+Regenerate (only when a selection change is *intended* and reviewed):
+
+    PYTHONPATH=src python tests/test_knapsack_golden.py --regen
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EpsilonConstraint, select_under_budget
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "knapsack_ties.json"
+
+FRACTIONS = (0.05, 0.1, 0.2, 0.35, 0.5, 0.75, 1.0)
+BUCKETS = (64, 256)
+Q, N = 4, 10
+
+
+def _tie_heavy_inputs():
+    """Integer profits and repeated integer costs — maximal tie pressure."""
+    rng = np.random.default_rng(0xA1)
+    # BARTScore-like negative integer scores: many equal profits post-shift
+    quality = rng.integers(-4, 0, (Q, N)).astype(np.float32)
+    # few distinct cost levels so cost ties are common too
+    costs = (rng.integers(1, 6, (Q, N)) * 1e11).astype(np.float32)
+    return quality, costs
+
+
+def _grid_masks(impl: str) -> dict:
+    quality, costs = _tie_heavy_inputs()
+    out = {}
+    for frac in FRACTIONS:
+        for buckets in BUCKETS:
+            mask = np.asarray(select_under_budget(
+                jnp.asarray(quality), jnp.asarray(costs),
+                EpsilonConstraint(frac, buckets=buckets), impl=impl,
+            ))
+            out[f"eps={frac}/buckets={buckets}"] = [
+                "".join("1" if x else "0" for x in row) for row in mask
+            ]
+    return out
+
+
+@pytest.mark.parametrize("impl", ["lax", "pallas"])
+def test_knapsack_tie_breaking_pinned(impl):
+    golden = json.loads(GOLDEN.read_text())
+    masks = _grid_masks(impl)
+    assert masks.keys() == golden["masks"].keys()
+    for key in golden["masks"]:
+        assert masks[key] == golden["masks"][key], (
+            f"{impl} selection drifted from golden at {key} — tie-breaking "
+            "changed; if intended, regenerate with --regen and review the diff"
+        )
+
+
+def test_golden_grid_is_tie_heavy():
+    """The pin is only meaningful if ties actually occur: several grid
+    points must select strictly fewer members than a greedy fill would,
+    and the two backends must agree with each other."""
+    lax = _grid_masks("lax")
+    assert lax == _grid_masks("pallas")
+    sizes = {k: sum(row.count("1") for row in v) for k, v in lax.items()}
+    assert len(set(sizes.values())) > 3  # the grid spans distinct regimes
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true")
+    if ap.parse_args().regen:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(
+            {"fractions": FRACTIONS, "buckets": BUCKETS, "q": Q, "n": N,
+             "masks": _grid_masks("lax")}, indent=2) + "\n")
+        print(f"wrote {GOLDEN}")

@@ -282,3 +282,104 @@ def test_backend_pool_size_mismatch_rejected(stack):
     with pytest.raises(ValueError):
         EnsembleServer(DEFAULT_POOL, make_policy("best-single"), pred, pp, fuser, fp,
                        backend=SimBackend(DEFAULT_POOL[:3]))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: result() scope, policy-group batching, rung snapping
+# ---------------------------------------------------------------------------
+
+
+def test_result_dispatches_only_own_batch(stack):
+    """Regression: ``result()`` used to flush the ENTIRE queue, force-
+    dispatching other submitters' young requests.  It must dispatch only
+    the batches up to and including the one containing this future —
+    other policy groups stay queued for their own triggers."""
+    pred, pp, fuser, fp = stack
+    server = EnsembleServer(DEFAULT_POOL, make_policy("modi", budget=0.2),
+                            pred, pp, fuser, fp)
+    sched = Scheduler(server, max_batch_size=8, max_wait_ticks=10)
+    recs = generate_dataset(3, seed=23)
+    mine = sched.submit(EnsembleRequest(query=recs[0].query, record=recs[0]))
+    other = sched.submit(EnsembleRequest(query=recs[1].query, record=recs[1],
+                                         policy="best-single"))
+    mine.result()
+    assert mine.done() and not other.done()
+    assert sched.pending == 1  # the other group was NOT force-flushed
+
+    # same-group requests ahead of the target ride along; younger ones wait
+    sched2 = Scheduler(server, max_batch_size=2, max_wait_ticks=10)
+    futs = [sched2.submit(EnsembleRequest(query=r.query, record=r))
+            for r in recs]
+    futs[2].result()
+    assert all(f.done() for f in futs)  # [0,1] then [2]: two batches
+    assert sched2.stats["dispatched_batches"] == 2
+
+
+def test_inline_dispatch_is_per_policy_group(stack):
+    """max_batch_size counts one policy group, not the whole queue: two
+    half-full groups must not be spliced into one mixed batch."""
+    pred, pp, fuser, fp = stack
+    server = EnsembleServer(DEFAULT_POOL, make_policy("modi", budget=0.2),
+                            pred, pp, fuser, fp)
+    sched = Scheduler(server, max_batch_size=3, max_wait_ticks=10)
+    recs = generate_dataset(4, seed=29)
+    for i, rec in enumerate(recs):
+        sched.submit(EnsembleRequest(
+            query=rec.query, record=rec,
+            policy=None if i % 2 == 0 else "best-single"))
+    assert sched.pending == 4  # 2 + 2, neither group reached 3
+    sched.submit(EnsembleRequest(query=recs[0].query, record=recs[0]))
+    assert sched.pending == 2  # default group hit 3 and dispatched alone
+    assert sched.stats["dispatched_batches"] == 1
+
+
+def test_tick_snaps_batch_to_ladder_rung(stack):
+    """An aged-out head drags the group along, but only down to the
+    largest bucket rung: 3 urgent + 2 young candidates -> a batch of 4
+    (floor rung of 5), leaving the youngest queued."""
+    pred, pp, fuser, fp = stack
+    server = EnsembleServer(DEFAULT_POOL, make_policy("modi", budget=0.2),
+                            pred, pp, fuser, fp)
+    sched = Scheduler(server, max_batch_size=8, max_wait_ticks=2)
+    recs = generate_dataset(5, seed=31)
+    for rec in recs[:3]:
+        sched.submit(EnsembleRequest(query=rec.query, record=rec))
+    sched.tick()  # ages 3 -> 1
+    for rec in recs[3:]:
+        sched.submit(EnsembleRequest(query=rec.query, record=rec))
+    served = sched.tick()  # first three hit max_wait_ticks=2
+    assert served == 4  # rung snap: 5 available -> rung 4
+    assert sched.pending == 1
+    assert sched.stats["padded_rows"] == 0  # 4 is exactly a rung
+
+
+def test_member_failure_hedges_to_survivors(stack, monkeypatch):
+    """A backend crash on one member re-serves the batch with that member
+    excluded instead of failing every sibling future."""
+    pred, pp, fuser, fp = stack
+    server = EnsembleServer(DEFAULT_POOL, make_policy("llm-blender"),
+                            pred, pp, fuser, fp)
+    sched = Scheduler(server, max_batch_size=4, max_wait_ticks=2)
+    recs = generate_dataset(2, seed=37)
+
+    real = server.backend.generate
+    calls = {"n": 0}
+
+    def flaky(member_idx, records, max_new_tokens):
+        if member_idx == 1 and calls["n"] == 0:
+            calls["n"] += 1
+            raise RuntimeError("member 1 transiently down")
+        return real(member_idx, records, max_new_tokens)
+
+    monkeypatch.setattr(server.backend, "generate", flaky)
+    futures = [sched.submit(req) for req in requests_from_records(recs)]
+    sched.flush()
+    out = [f.result() for f in futures]
+    assert sched.stats["hedges"] == 1
+    # the hedged batch equals the offline path with the member excluded
+    offline = server.serve_requests(requests_from_records(recs),
+                                    exclude_members=frozenset({1}))
+    for resp, off in zip(out, offline):
+        assert not resp.mask[1]  # the failed member was excluded
+        assert resp.text == off.text
+        assert resp.member_texts == off.member_texts

@@ -263,6 +263,48 @@ def test_decode_capped_never_inflates_past_cap():
 
 
 # ---------------------------------------------------------------------------
+# Padding invariance: a request's tokens are independent of rung/position
+# ---------------------------------------------------------------------------
+
+_PAD_INV_CACHE = {}
+
+
+def _pad_inv_dispatcher() -> DecoderGenerateDispatcher:
+    # built lazily (not a fixture: the hypothesis shim's @given wraps the
+    # test into a zero-arg runner), shared across examples so each bucket
+    # compiles exactly once
+    if "d" not in _PAD_INV_CACHE:
+        cfg = configs.get("smollm-360m").reduced(dtype="float32")
+        model = build_model(cfg)
+        _PAD_INV_CACHE["d"] = DecoderGenerateDispatcher(
+            model, model.init(jax.random.key(2)))
+    return _PAD_INV_CACHE["d"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    extra=st.integers(0, 4),  # batch sizes 1..5 -> bucket rungs 1, 2, 4, 8
+    pos=st.integers(0, 4),
+    seed=st.integers(0, 2**20),
+)
+def test_bucketed_dispatch_padding_invariant(extra, pos, seed):
+    """A row's generated tokens are identical regardless of which bucket
+    rung the batch pads to and which batch position the row occupies:
+    batch-of-k at position p == batch-of-1, across rungs."""
+    dispatch = _pad_inv_dispatcher()
+    rng = np.random.default_rng(seed)
+    words = ["alpha", "beta", "gamma", "delta", "echo", "fox", "golf", "hotel"]
+    queries = [" ".join(rng.choice(words, size=rng.integers(1, 4)))
+               for _ in range(extra + 1)]
+    pos = min(pos, extra)
+    prompts = TOKENIZER.pad_batch(
+        [TOKENIZER.encode(q, bos=True) for q in queries], 16)
+    full = dispatch(prompts, max_new=6)
+    solo = dispatch(prompts[pos:pos + 1], max_new=6)
+    np.testing.assert_array_equal(full[pos], solo[0])
+
+
+# ---------------------------------------------------------------------------
 # Bitmask knapsack (satellite: exact selection equivalence + memory bound)
 # ---------------------------------------------------------------------------
 

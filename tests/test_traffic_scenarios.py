@@ -1,0 +1,275 @@
+"""Scenario suite for the serving stack (its own CI tier: ``-m scenario``).
+
+Drives the continuous-batching Scheduler through the deterministic
+traffic simulator and pins three properties per scenario:
+
+* **offline equivalence** — the simulated stream's fused responses are
+  byte-identical to one offline ``EnsembleServer.serve_requests`` call
+  over the same requests (and, for override-free scenarios, to
+  ``EnsembleServer.serve`` over the same records);
+* **golden counters** — deadline-miss and shed counts match hand-computed
+  traces on small scenarios whose schedules can be worked out on paper;
+* **replayability** — re-running a scenario from scratch reproduces the
+  event trace byte for byte.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import build_predictor, make_policy
+from repro.data import DEFAULT_POOL, generate_dataset
+from repro.models import build_model
+from repro.serve import (
+    AdmissionControl,
+    ArrivalProcess,
+    EnsembleRequest,
+    EnsembleServer,
+    RequestShed,
+    Scenario,
+    Scheduler,
+    TrafficSimulator,
+    preset_scenarios,
+)
+
+pytestmark = pytest.mark.scenario
+
+
+@pytest.fixture(scope="module")
+def stack():
+    pred = build_predictor(num_models=len(DEFAULT_POOL))
+    pp = pred.init(jax.random.key(0))
+    fuser = build_model(configs.get("gen-fuser"))
+    fp = fuser.init(jax.random.key(1))
+    return pred, pp, fuser, fp
+
+
+def _server(stack, policy="modi", **kwargs):
+    pred, pp, fuser, fp = stack
+    return EnsembleServer(DEFAULT_POOL, make_policy(policy, **kwargs),
+                          pred, pp, fuser, fp)
+
+
+RECORDS = generate_dataset(12, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# Offline equivalence: any batching/deadline/priority schedule, same bytes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["steady", "bursty", "heavy-tail"])
+def test_scenario_stream_matches_offline_batch(stack, name):
+    scenario = preset_scenarios(n_requests=12)[name]
+    sched = Scheduler(_server(stack, budget=0.2), max_batch_size=4,
+                      max_wait_ticks=2)
+    report = TrafficSimulator(sched, scenario, RECORDS).run()
+    assert report.served == report.n  # nothing shed, nothing hung
+    offline = _server(stack, budget=0.2).serve_requests(report.requests)
+    assert [r.text for r in report.responses] == [r.text for r in offline]
+    assert all((a.mask == b.mask).all()
+               for a, b in zip(report.responses, offline))
+
+
+def test_override_free_scenario_matches_serve_records(stack):
+    """steady has no mix, so its requests are bare record wraps — the
+    stream must also equal the plain offline ``serve`` over the records."""
+    scenario = preset_scenarios(n_requests=12)["steady"]
+    sched = Scheduler(_server(stack, budget=0.2), max_batch_size=4,
+                      max_wait_ticks=2)
+    report = TrafficSimulator(sched, scenario, RECORDS).run()
+    offline = _server(stack, budget=0.2).serve(RECORDS)
+    assert [r.text for r in report.responses] == offline.responses
+
+
+def test_failure_scenario_hedges_and_stays_equivalent(stack):
+    """Injected member failure: the batch re-serves on the survivors, every
+    future resolves, and responses equal the offline path — plain for
+    untouched requests, member-excluded for the hedged batch."""
+    scenario = preset_scenarios(n_requests=12)["failure"]
+    sched = Scheduler(_server(stack, budget=0.2), max_batch_size=4,
+                      max_wait_ticks=2)
+    report = TrafficSimulator(sched, scenario, RECORDS).run()
+    assert report.served == report.n  # no hung or failed futures
+    assert report.stats["hedges"] >= 1
+
+    hedged, excluded = set(), set()
+    for ev in report.trace:
+        if ev["event"] == "hedge":
+            hedged.update(ev["reqs"])
+            excluded.update(ev["exclude"])
+    assert hedged and excluded  # the injection actually fired
+
+    plain = _server(stack, budget=0.2).serve_requests(report.requests)
+    for i in range(report.n):
+        if i not in hedged:
+            assert report.responses[i].text == plain[i].text
+    aff = sorted(hedged)
+    retried = _server(stack, budget=0.2).serve_requests(
+        [report.requests[i] for i in aff],
+        exclude_members=frozenset(excluded))
+    for i, resp in zip(aff, retried):
+        assert report.responses[i].text == resp.text
+        assert not report.responses[i].mask[sorted(excluded)].any()
+
+
+def test_failure_scenario_on_reused_server_rewraps_injector(stack):
+    """A second failure-scenario run against the same server must reinstall
+    a fresh injection schedule with reset call counters (regression: an
+    idempotent wrap kept the first run's consumed counters, silently
+    turning the second run's faults into no-ops)."""
+    scenario = preset_scenarios(n_requests=12)["failure"]
+    server = _server(stack, budget=0.2)
+    r1 = TrafficSimulator(Scheduler(server, max_batch_size=4, max_wait_ticks=2),
+                          scenario, RECORDS).run()
+    r2 = TrafficSimulator(Scheduler(server, max_batch_size=4, max_wait_ticks=2),
+                          scenario, RECORDS).run()
+    assert r1.stats["hedges"] == r2.stats["hedges"] == 1
+    assert r1.trace == r2.trace  # replay guarantee holds across reuse
+
+
+def test_hedging_disabled_fails_batch_but_resolves_futures(stack):
+    scenario = preset_scenarios(n_requests=12)["failure"]
+    sched = Scheduler(_server(stack, budget=0.2), max_batch_size=4,
+                      max_wait_ticks=2, hedge=False)
+    report = TrafficSimulator(sched, scenario, RECORDS).run()
+    failed = [e for e in report.errors if e is not None]
+    assert failed  # the injected fault surfaced
+    # but every future resolved one way or the other — none left pending
+    assert report.served + len(failed) == report.n
+
+
+# ---------------------------------------------------------------------------
+# Golden traces: hand-computed deadline-miss / shed counters
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_miss_golden_trace(stack):
+    """5 same-policy requests arrive at tick 0 (max_batch_size=8, so no
+    inline dispatch; max_wait_ticks=10, so age never triggers):
+
+    * 2 with deadline_ticks=0 (absolute deadline 0),
+    * 3 with deadline_ticks=3 (absolute deadline 3).
+
+    tick 1: the two deadline-0 requests are due (0 <= 1).  EDF puts them
+    first; 5 candidates is not a ladder rung, the floor rung is 4 and
+    2 are forced, so the batch takes 4: both deadline-0 (served at tick
+    1 > 0 — two misses) plus two deadline-3 rides-along (met).  tick 2:
+    nothing due.  tick 3: the last deadline-3 request is due and served
+    exactly at its deadline — met.  Totals: 2 misses, 2 batches of
+    sizes 4 and 1, zero padded rows (both sizes are rungs)."""
+    sched = Scheduler(_server(stack, budget=0.2), max_batch_size=8,
+                      max_wait_ticks=10)
+    recs = generate_dataset(5, seed=7)
+    futures = []
+    for i, rec in enumerate(recs):
+        futures.append(sched.submit(EnsembleRequest(
+            query=rec.query, record=rec,
+            deadline_ticks=0 if i < 2 else 3)))
+    assert sched.pending == 5
+    assert sched.tick() == 4  # forced pair + two rides-along
+    assert [f.done() for f in futures] == [True, True, True, True, False]
+    assert sched.tick() == 0  # tick 2: nothing due
+    assert sched.tick() == 1  # tick 3: last request at its deadline
+    assert sched.stats["deadline_misses"] == 2
+    assert [f.deadline_missed for f in futures] == [True, True, False, False, False]
+    assert sched.stats["dispatched_batches"] == 2
+    assert sched.stats["padded_rows"] == 0  # 4 and 1 are both ladder rungs
+    miss_events = [e for e in sched.events if e["event"] == "miss"]
+    assert sorted(e["req"] for e in miss_events) == [0, 1]
+
+
+def test_shed_golden_trace(stack):
+    """llm-blender at full cost with shed threshold 0.9 over a 4-tick
+    window, max_batch_size=2: submits 1-2 fill a batch (window empty, so
+    admitted) and dispatch inline at tick 0 at cost fraction 1.0; submits
+    3-6 all see the window at 1.0 >= 0.9 and shed.  After the window
+    slides past tick 0 (4 ticks later) traffic admits again."""
+    sched = Scheduler(
+        _server(stack, policy="llm-blender"), max_batch_size=2,
+        max_wait_ticks=10,
+        admission=AdmissionControl(window_ticks=4, shed_fraction=0.9))
+    recs = generate_dataset(7, seed=5)
+    futures = [sched.submit(EnsembleRequest(query=r.query, record=r))
+               for r in recs[:6]]
+    assert sched.stats["shed"] == 4
+    assert [f.shed() for f in futures] == [False, False, True, True, True, True]
+    for f in futures[2:]:
+        with pytest.raises(RequestShed):
+            f.result()
+    for _ in range(5):
+        sched.tick()
+    late = sched.submit(EnsembleRequest(query=recs[6].query, record=recs[6]))
+    assert not late.shed()  # the hot window has rolled off
+    assert sched.stats["shed"] == 4
+
+
+def test_downgrade_golden_trace(stack):
+    """modi at ε=1.0 (selects nearly everything) with a 0.5 downgrade
+    threshold: the first inline batch fills the window at ~1.0, so the
+    following submits are downgraded to ε=0.1 and their realized cost
+    fraction obeys the tightened budget."""
+    sched = Scheduler(
+        _server(stack, budget=1.0), max_batch_size=2, max_wait_ticks=10,
+        admission=AdmissionControl(window_ticks=4, downgrade_fraction=0.5,
+                                   downgrade_budget=0.1))
+    recs = generate_dataset(4, seed=9)
+    futures = [sched.submit(EnsembleRequest(query=r.query, record=r))
+               for r in recs]
+    sched.flush()
+    assert sched.stats["downgraded"] == 2
+    assert [f.result().cost_fraction <= 0.1 + 1e-6 for f in futures] == [
+        False, False, True, True]
+
+
+# ---------------------------------------------------------------------------
+# Determinism: the trace is replayable byte for byte
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["bursty", "failure"])
+def test_scenario_trace_replays_identically(stack, name):
+    scenario = preset_scenarios(n_requests=12)[name]
+
+    def run_once():
+        sched = Scheduler(_server(stack, budget=0.2), max_batch_size=4,
+                          max_wait_ticks=2,
+                          admission=AdmissionControl(window_ticks=4))
+        return TrafficSimulator(sched, scenario, RECORDS).run()
+
+    a, b = run_once(), run_once()
+    assert a.trace == b.trace  # ticks, batches, digests — everything
+    assert a.stats == b.stats
+    assert a.latency_ticks == b.latency_ticks
+
+
+def test_arrival_processes_are_deterministic_and_ordered():
+    rng = np.random.default_rng(0)
+    for kind in ("steady", "bursty", "heavy-tail"):
+        proc = ArrivalProcess(kind)
+        a = proc.arrival_ticks(20, np.random.default_rng(5))
+        b = proc.arrival_ticks(20, np.random.default_rng(5))
+        assert a == b
+        assert all(x <= y for x, y in zip(a, a[1:]))  # non-decreasing
+    with pytest.raises(ValueError):
+        ArrivalProcess("poissonish").arrival_ticks(3, rng)
+
+
+def test_priority_orders_same_deadline_requests(stack):
+    """Two requests, same deadline, one high priority: EDF tie-break puts
+    the high-priority request in the first (rung-snapped) batch."""
+    sched = Scheduler(_server(stack, budget=0.2), max_batch_size=8,
+                      max_wait_ticks=10)
+    recs = generate_dataset(3, seed=13)
+    futs = [sched.submit(EnsembleRequest(query=r.query, record=r,
+                                         deadline_ticks=1,
+                                         priority=(3 if i == 2 else 0)))
+            for i, r in enumerate(recs)]
+    sched.tick()  # all due; 3 is not a rung -> floor rung 2, forced... all 3
+    # all three were due, so all are forced out regardless of rung snapping
+    assert all(f.done() for f in futs)
+    first_batch = next(e for e in sched.events if e["event"] == "dispatch")
+    assert first_batch["reqs"][0] == 2  # high priority leads the batch
