@@ -1,0 +1,197 @@
+"""Cluster-serving benchmark: async dispatch vs sync, submit blocking,
+and host-failure recovery over a sharded placement.
+
+Writes ``BENCH_serve_cluster.json``:
+
+* ``submit_p50_s`` / ``submit_p99_s`` — wall time a caller spends inside
+  ``Scheduler.submit`` with async dispatch on (acceptance: p99 below one
+  batch of service time, i.e. submit never blocks on a batch), with the
+  sync scheduler's numbers alongside for contrast;
+* ``async_p50_s`` / ``async_p99_s`` vs ``sync_p50_s`` / ``sync_p99_s`` —
+  end-to-end request latency through the same steady scenario;
+* ``recovery_max_s`` — worst request latency through the host-outage
+  scenario (the hedged batch pays the failed attempt plus the
+  knapsack re-solve on the survivors), with the unhedged median for
+  scale;
+* ``steady_state_recompiles`` — generate compiles after warm; 0 means
+  placement routing reuses every BucketLadder bucket.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+cluster/bench jobs do) to exercise real per-host meshes; on a single
+device the placement is logical-only and routes identically.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import build_predictor, make_policy
+from repro.data import DEFAULT_POOL, generate_dataset
+from repro.models import build_model
+from repro.serve import (
+    ClusterRouter,
+    EnsembleServer,
+    PlacementPlan,
+    Scheduler,
+    TrafficSimulator,
+    preset_scenarios,
+)
+from repro.serve.traffic import build_arrivals
+
+
+_STACK = None
+
+
+def _build_server(budget: float, n_hosts: int) -> EnsembleServer:
+    global _STACK
+    if _STACK is None:
+        pred = build_predictor(num_models=len(DEFAULT_POOL))
+        pp = pred.init(jax.random.key(0))
+        fuser = build_model(configs.get("gen-fuser"))
+        fp = fuser.init(jax.random.key(1))
+        _STACK = (pred, pp, fuser, fp)
+    pred, pp, fuser, fp = _STACK
+    server = EnsembleServer(DEFAULT_POOL, make_policy("modi", budget=budget),
+                            pred, pp, fuser, fp)
+    devices = jax.devices()
+    placeable = (len(devices) >= n_hosts and len(devices) % n_hosts == 0)
+    plan = PlacementPlan.auto(DEFAULT_POOL, n_hosts=n_hosts,
+                              devices=devices if placeable else None)
+    server.backend = ClusterRouter(server.backend, plan=plan)
+    return server
+
+
+def _warm(server: EnsembleServer, batch_size: int) -> int:
+    ladder = server.bucket_ladder
+    rungs = sorted({ladder.batch_bucket(b) for b in range(1, batch_size + 1)})
+    server.warm([(b, server.max_new_tokens) for b in rungs])
+    return server.generate_compiles()["total"]
+
+
+def _drive_submits(sched: Scheduler, scenario, records) -> List[float]:
+    """Drive one scenario manually, returning per-call submit wall times."""
+    arrivals = build_arrivals(scenario, records)
+    durations: List[float] = []
+    idx = 0
+    while idx < len(arrivals) or sched.pending:
+        while idx < len(arrivals) and arrivals[idx][0] <= sched.now:
+            t0 = time.perf_counter()
+            sched.submit(arrivals[idx][1])
+            durations.append(time.perf_counter() - t0)
+            idx += 1
+        sched.tick()
+    sched.join()
+    return durations
+
+
+def run(n_requests: int = 16, batch_size: int = 4, budget: float = 0.2,
+        n_hosts: int = 4, out_path: str = "BENCH_serve_cluster.json",
+        log=print):
+    records = generate_dataset(max(n_requests, 16), seed=1234)
+    scenarios = preset_scenarios(n_requests=n_requests)
+    steady, outage = scenarios["steady"], scenarios["host-outage"]
+
+    # -- submit blocking (async) vs inline dispatch (sync) ---------------
+    server = _build_server(budget, n_hosts)
+    warm_compiles = _warm(server, batch_size)
+    sched = Scheduler(server, max_batch_size=batch_size, max_wait_ticks=2,
+                      sync=False)
+    async_submits = _drive_submits(sched, steady, records)
+    sched.close()
+    async_compiles = server.generate_compiles()["total"]
+
+    server_sync = _build_server(budget, n_hosts)
+    _warm(server_sync, batch_size)
+    sync_submits = _drive_submits(
+        Scheduler(server_sync, max_batch_size=batch_size, max_wait_ticks=2),
+        steady, records)
+
+    # -- end-to-end latency, async vs sync -------------------------------
+    server_a = _build_server(budget, n_hosts)
+    _warm(server_a, batch_size)
+    sched_a = Scheduler(server_a, max_batch_size=batch_size, max_wait_ticks=2,
+                        sync=False)
+    rep_a = TrafficSimulator(sched_a, steady, records).run()
+    sched_a.close()
+    batch_service = [r.timing["total_s"] for r in rep_a.responses if r is not None]
+
+    server_s = _build_server(budget, n_hosts)
+    _warm(server_s, batch_size)
+    rep_s = TrafficSimulator(
+        Scheduler(server_s, max_batch_size=batch_size, max_wait_ticks=2),
+        steady, records).run()
+
+    # -- host-failure recovery --------------------------------------------
+    server_f = _build_server(budget, n_hosts)
+    _warm(server_f, batch_size)
+    sched_f = Scheduler(server_f, max_batch_size=batch_size, max_wait_ticks=2,
+                        sync=False)
+    rep_f = TrafficSimulator(sched_f, outage, records).run()
+    sched_f.close()
+    hedged = sorted({r for ev in rep_f.trace if ev["event"] == "host_hedge"
+                     for r in ev["reqs"]})
+    hedged_walls = [rep_f.wall_latency_s[i] for i in hedged
+                    if rep_f.wall_latency_s[i] is not None]
+    plain_walls = [w for i, w in enumerate(rep_f.wall_latency_s)
+                   if w is not None and i not in hedged]
+
+    p = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0  # noqa: E731
+    batch_service_mean = float(np.mean(batch_service)) if batch_service else 0.0
+    result = {
+        "n_hosts": n_hosts,
+        "devices": len(jax.devices()),
+        "n_requests": n_requests,
+        "batch_size": batch_size,
+        "submit_p50_s": p(async_submits, 50),
+        "submit_p99_s": p(async_submits, 99),
+        "submit_p50_sync_s": p(sync_submits, 50),
+        "submit_p99_sync_s": p(sync_submits, 99),
+        "batch_service_mean_s": batch_service_mean,
+        "submit_p99_under_one_batch": p(async_submits, 99) < batch_service_mean,
+        "async_p50_s": rep_a.latency_percentiles()["p50_latency_s"],
+        "async_p99_s": rep_a.latency_percentiles()["p99_latency_s"],
+        "sync_p50_s": rep_s.latency_percentiles()["p50_latency_s"],
+        "sync_p99_s": rep_s.latency_percentiles()["p99_latency_s"],
+        "host_hedges": rep_f.stats["host_hedges"],
+        "recovery_max_s": max(hedged_walls, default=0.0),
+        "unhedged_median_s": p(plain_walls, 50),
+        "compiles_after_warm": warm_compiles,
+        "compiles_final": async_compiles,
+        "steady_state_recompiles": async_compiles - warm_compiles,
+        "backend": "sim+cluster",
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    log(f"wrote {out_path}: submit_p99={result['submit_p99_s']*1e6:.0f}us "
+        f"(sync {result['submit_p99_sync_s']*1e6:.0f}us) "
+        f"batch_service={batch_service_mean*1e3:.1f}ms "
+        f"recovery_max={result['recovery_max_s']*1e3:.1f}ms "
+        f"recompiles={result['steady_state_recompiles']}")
+    return [
+        ("serve_cluster_submit_p99", result["submit_p99_s"] * 1e6,
+         f"sync={result['submit_p99_sync_s']*1e6:.0f}us "
+         f"batch={batch_service_mean*1e6:.0f}us "
+         f"under_one_batch={result['submit_p99_under_one_batch']}"),
+        ("serve_cluster_recovery", result["recovery_max_s"] * 1e6,
+         f"host_hedges={result['host_hedges']} "
+         f"unhedged_p50={result['unhedged_median_s']*1e6:.0f}us "
+         f"recompiles={result['steady_state_recompiles']}"),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--budget", type=float, default=0.2)
+    ap.add_argument("--hosts", type=int, default=4)
+    args = ap.parse_args()
+    run(n_requests=args.n_requests, batch_size=args.batch_size,
+        budget=args.budget, n_hosts=args.hosts)

@@ -6,10 +6,11 @@ Prints ``name,us_per_call,derived`` CSV rows.  Table 1 / budget-sweep train
 the paper stack on first run (cached in experiments/checkpoints/).
 
 ``--only`` selects a comma-separated subset of sections
-(knapsack, serve, table1, sweep, roofline) — the CI bench smoke job runs
-``--fast --only knapsack,serve`` and uploads the ``BENCH_*.json``
-artifacts (BENCH_knapsack.json, BENCH_serve.json) each section writes, so
-the perf trajectory accumulates per PR.
+(knapsack, serve, cluster, table1, sweep, roofline) — the CI bench smoke
+job runs ``--fast --only knapsack,serve,cluster`` and uploads the
+``BENCH_*.json`` artifacts (BENCH_knapsack.json, BENCH_serve.json,
+BENCH_serve_cluster.json) each section writes, so the perf trajectory
+accumulates per PR.
 """
 
 from __future__ import annotations
@@ -21,7 +22,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-SECTIONS = ("knapsack", "serve", "table1", "sweep", "roofline")
+SECTIONS = ("knapsack", "serve", "cluster", "table1", "sweep", "roofline")
 
 
 def main() -> None:
@@ -62,6 +63,12 @@ def main() -> None:
             "bursty", n_requests=16 if args.fast else 32,
             out_path="BENCH_serve_scenario.json",
         )
+
+    if "cluster" in selected:
+        from benchmarks import cluster_bench
+
+        print("\n### cluster serving (async dispatch / placement / host failover)")
+        rows += cluster_bench.run(n_requests=12 if args.fast else 24)
 
     if "table1" in selected:
         from benchmarks import table1

@@ -1,4 +1,4 @@
-"""Drive the serving stack through the four preset traffic scenarios and
+"""Drive the serving stack through the preset traffic scenarios and
 print the SLO summary each produces — then prove the stream is exactly
 the offline batch in disguise.
 
@@ -6,8 +6,11 @@ the offline batch in disguise.
 
 Per scenario: p50/p99 request latency, deadline-miss rate, shed rate,
 hedged retries, and steady-state recompiles.  The ``failure`` scenario
-injects a mid-batch backend fault; hedged retry re-serves the batch on
-the surviving members, so every request still resolves.
+injects a mid-batch backend fault (hedged retry re-serves the batch on
+the surviving members); ``host-outage`` kills a whole placement host
+(the knapsack re-solves over the surviving members); ``diurnal`` drives
+a sinusoidal day/night load curve.  Every request resolves in all of
+them.
 """
 
 import argparse
@@ -52,13 +55,16 @@ def main():
               f"miss={report.deadline_miss_rate:.0%} "
               f"shed={report.shed_rate:.0%} "
               f"hedges={report.stats['hedges']} "
+              f"host_hedges={report.stats['host_hedges']} "
               f"recompiles={report.compiles['total'] - warm}")
 
         # the stream is the offline batch in disguise: byte-identical
+        # (fault-injecting scenarios hedge mid-run, so their hedged
+        # batches intentionally diverge from the plain offline solve)
         offline_server = EnsembleServer(
             DEFAULT_POOL, make_policy("modi", budget=args.budget),
             predictor, pred_p, fuser, fuser_p)
-        if not scenario.failures:
+        if not scenario.failures and not scenario.host_failures:
             offline = offline_server.serve_requests(report.requests)
             assert [r.text for r in report.responses] == [r.text for r in offline]
     print("\nevery scenario's stream matched its offline batch byte for byte")

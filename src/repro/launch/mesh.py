@@ -7,13 +7,18 @@ single-pod 16x16 and the 2-pod 2x16x16 meshes can be built.
 
 from __future__ import annotations
 
-from typing import Mapping, Optional
+from typing import List, Mapping, Optional
 
 import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.sharding.api import AxisRules, default_axis_rules
+from repro.sharding.api import (
+    AxisRules,
+    default_axis_rules,
+    host_mesh,
+    partition_devices,
+)
 
 # v5e hardware constants for the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
@@ -38,3 +43,24 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def production_rules(mesh: Mesh, overrides: Optional[Mapping] = None) -> AxisRules:
     return default_axis_rules(mesh, overrides)
+
+
+def cluster_host_devices(n_hosts: int) -> List[tuple]:
+    """Device groups for the serving cluster's logical hosts.
+
+    Partitions the visible fleet into ``n_hosts`` contiguous groups (one
+    per placement host — see ``repro.serve.cluster``).  When the fleet is
+    smaller than the host count (the 1-CPU default), returns empty groups:
+    the placement layer then runs logical-only, which routes identically —
+    run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+    CI cluster job does) to exercise real per-host meshes."""
+    devices = jax.devices()
+    if len(devices) < n_hosts or len(devices) % n_hosts != 0:
+        return [() for _ in range(n_hosts)]
+    return [tuple(g) for g in partition_devices(devices, n_hosts)]
+
+
+def make_host_meshes(n_hosts: int) -> List[Optional[Mesh]]:
+    """One (data, model) mesh per cluster host, or Nones when the fleet
+    cannot be split evenly (logical-only placement)."""
+    return [host_mesh(g) if g else None for g in cluster_host_devices(n_hosts)]

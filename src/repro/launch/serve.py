@@ -34,9 +34,12 @@ from repro.data import (
 )
 from repro.models import build_model
 from repro.optim import AdamW
+from repro.launch.mesh import cluster_host_devices
 from repro.serve import (
     AdmissionControl,
+    ClusterRouter,
     EnsembleServer,
+    PlacementPlan,
     RequestShed,
     Scheduler,
     requests_from_records,
@@ -126,6 +129,23 @@ def main():
                          "downgraded to half the per-query budget")
     ap.add_argument("--admission-shed", type=float, default=None,
                     help="window cost fraction past which new requests are shed")
+    ap.add_argument("--admission-deadline", action="store_true",
+                    help="shed requests whose predicted queue delay already "
+                         "exceeds their deadline")
+    ap.add_argument("--hosts", type=int, default=None,
+                    help="shard the pool over this many placement hosts "
+                         "(cluster serving; logical-only when the device "
+                         "fleet cannot be split)")
+    ap.add_argument("--placement", type=str, default="auto",
+                    choices=("auto", "round-robin"),
+                    help="member->host placer: greedy cost/VRAM-balanced "
+                         "or round-robin")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica hosts per member (auto placement only; "
+                         "replicated members survive a host failure)")
+    ap.add_argument("--async", dest="async_dispatch", action="store_true",
+                    help="serve batches on a dispatch worker thread so "
+                         "submit never blocks on a batch (--online only)")
     args = ap.parse_args()
 
     recs, scorer, scorer_p, fuser, fuser_p, predictor, pred_p = build_stack(
@@ -136,6 +156,18 @@ def main():
         make_policy(args.policy, budget=args.budget),
         predictor, pred_p, fuser, fuser_p,
     )
+    if args.hosts:
+        groups = cluster_host_devices(args.hosts)
+        devices = [d for g in groups for d in g] or None
+        if args.placement == "round-robin":
+            plan = PlacementPlan.round_robin(len(DEFAULT_POOL), args.hosts,
+                                             devices=devices)
+        else:
+            plan = PlacementPlan.auto(DEFAULT_POOL, args.hosts,
+                                      replicas=args.replicas, devices=devices)
+        server.backend = ClusterRouter(server.backend, plan=plan)
+        print(f"cluster placement ({args.placement}, {args.hosts} hosts):")
+        print(plan.describe())
     if args.online:
         # pre-compile every bucket a scheduler batch can map to: early
         # micro-batches dispatch before the queue fills, so sizes
@@ -147,16 +179,19 @@ def main():
     batch = generate_dataset(args.n, seed=args.seed + 999)
     if args.online:
         admission = None
-        if args.admission_downgrade is not None or args.admission_shed is not None:
+        if (args.admission_downgrade is not None
+                or args.admission_shed is not None or args.admission_deadline):
             admission = AdmissionControl(
                 window_ticks=args.admission_window,
                 downgrade_fraction=args.admission_downgrade,
                 downgrade_budget=args.budget / 2,
                 shed_fraction=args.admission_shed,
+                deadline_aware=args.admission_deadline,
             )
         scheduler = Scheduler(server, max_batch_size=args.max_batch_size,
                               max_wait_ticks=args.max_wait_ticks,
-                              admission=admission)
+                              admission=admission,
+                              sync=not args.async_dispatch)
         futures = [
             scheduler.submit(req)
             for req in requests_from_records(
@@ -164,12 +199,14 @@ def main():
                 deadline_ticks=args.deadline_ticks)
         ]
         scheduler.flush()
+        scheduler.join()
         out = []
         for f in futures:
             try:
                 out.append(f.result())
             except RequestShed:
                 out.append(None)
+        scheduler.close()
         shed = sum(r is None for r in out)
         kept = [(r, rec) for r, rec in zip(out, batch) if r is not None]
         out = [r for r, _ in kept]

@@ -1,11 +1,20 @@
 from repro.serve.api import EnsembleRequest, EnsembleResponse, requests_from_records
 from repro.serve.backends import (
     FailureInjector,
+    HostFailure,
     LiveLMBackend,
     LiveMember,
     MemberBackend,
     MemberFailure,
     SimBackend,
+)
+from repro.serve.cluster import (
+    ClusterRouter,
+    DispatchWorker,
+    HostSpec,
+    InboxFull,
+    MemberPlacement,
+    PlacementPlan,
 )
 from repro.serve.dispatch import (
     BucketLadder,
@@ -22,6 +31,7 @@ from repro.serve.scheduler import (
 )
 from repro.serve.traffic import (
     ArrivalProcess,
+    CapturedTrace,
     Scenario,
     TrafficReport,
     TrafficSimulator,
@@ -34,16 +44,24 @@ __all__ = [
     "AdmissionControl",
     "ArrivalProcess",
     "BucketLadder",
+    "CapturedTrace",
+    "ClusterRouter",
     "DecoderGenerateDispatcher",
+    "DispatchWorker",
     "EncDecGenerateDispatcher",
     "EnsembleRequest",
     "EnsembleResponse",
     "EnsembleServer",
     "FailureInjector",
+    "HostFailure",
+    "HostSpec",
+    "InboxFull",
     "LiveLMBackend",
     "LiveMember",
     "MemberBackend",
     "MemberFailure",
+    "MemberPlacement",
+    "PlacementPlan",
     "RequestShed",
     "ResponseFuture",
     "Scenario",

@@ -61,6 +61,29 @@ class MemberFailure(RuntimeError):
         self.cause = cause
 
 
+class HostFailure(RuntimeError):
+    """A whole placement host died mid-batch (cluster serving).
+
+    Raised by a placement-aware backend (see
+    :class:`repro.serve.cluster.ClusterRouter`) when a host-level fault
+    takes down every member replica placed on ``host_id``.
+    ``member_idxs`` lists the pool members left with *no* surviving
+    replica — the set the Scheduler must mask out of the knapsack before
+    re-serving the batch on the surviving placements.  Members that keep
+    a live replica on another host are failed over inside the router and
+    never appear here."""
+
+    def __init__(self, host_id: int, member_idxs: Sequence[int] = (),
+                 cause: BaseException | None = None):
+        dead = ", ".join(str(j) for j in member_idxs) or "none"
+        super().__init__(
+            f"host {host_id} failed (members with no surviving replica: {dead})"
+        )
+        self.host_id = host_id
+        self.member_idxs = tuple(member_idxs)
+        self.cause = cause
+
+
 def per_row_caps(max_new_tokens: MaxNewTokens, n_rows: int) -> List[int]:
     """Normalize an int-or-sequence token cap to one cap per row."""
     if isinstance(max_new_tokens, int):
@@ -160,6 +183,10 @@ class FailureInjector:
     def compiles(self) -> int:
         compiles = getattr(self.inner, "compiles", None)
         return compiles() if callable(compiles) else 0
+
+    def dead_members(self) -> List[int]:
+        dead = getattr(self.inner, "dead_members", None)
+        return dead() if callable(dead) else []
 
 
 @dataclasses.dataclass

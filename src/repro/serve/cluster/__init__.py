@@ -1,0 +1,33 @@
+"""Sharded multi-host serving: placement, routing, async dispatch.
+
+The cluster subsystem marries ``repro.sharding`` with the serving stack:
+
+* :class:`PlacementPlan` — which hosts (device groups) each pool member
+  runs on, with replica counts and a greedy cost/VRAM-balanced
+  auto-placer (:meth:`PlacementPlan.auto`);
+* :class:`ClusterRouter` — a placement-aware
+  :class:`~repro.serve.backends.MemberBackend` wrapper that routes each
+  scheduler batch's per-member sub-batches to their placement (reusing
+  the inner backend's BucketLadder jit caches), fails replicated members
+  over on host death, and escalates unreplicated deaths as
+  :class:`~repro.serve.backends.HostFailure`;
+* :class:`DispatchWorker` — the bounded-inbox thread behind
+  ``Scheduler(sync=False)``, so ``submit`` never blocks on a batch.
+"""
+
+from repro.serve.cluster.placement import (
+    HostSpec,
+    MemberPlacement,
+    PlacementPlan,
+)
+from repro.serve.cluster.router import ClusterRouter
+from repro.serve.cluster.worker import DispatchWorker, InboxFull
+
+__all__ = [
+    "ClusterRouter",
+    "DispatchWorker",
+    "HostSpec",
+    "InboxFull",
+    "MemberPlacement",
+    "PlacementPlan",
+]

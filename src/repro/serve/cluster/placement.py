@@ -1,0 +1,241 @@
+"""Member-to-host placement over a sharded device fleet.
+
+A :class:`PlacementPlan` assigns every pool member to one or more
+logical *hosts* — contiguous device groups carved out of the fleet by
+:func:`repro.sharding.api.partition_devices` — and knows how to stand up
+the per-host mesh (:func:`repro.sharding.api.host_mesh`) and the
+per-member :class:`~repro.sharding.api.AxisRules` that member's
+generation should run under.  Plans are *logical first*: a plan built
+without real devices (single-device CI, the behavioural simulator) has
+the same routing semantics as one spanning an 8-host forced-device
+mesh, so every cluster test runs anywhere.
+
+Two constructors cover the common cases:
+
+* :meth:`PlacementPlan.auto` — the greedy cost/VRAM-balanced placer:
+  members are placed heaviest-first onto the host with the least
+  accumulated weight (bf16 parameter bytes, which under Kaplan costs is
+  also proportional to per-token FLOPs — balancing one balances both),
+  with replicas forced onto distinct hosts so a single host failure
+  never kills a replicated member.
+* :meth:`PlacementPlan.round_robin` — member *i* on host ``i % n`` (the
+  permutation-property tests sweep arbitrary assignments on top).
+
+Host death is a plan-level state change: :meth:`mark_host_dead` flips
+the host and returns the members left with no surviving replica — the
+set the Scheduler masks out of the knapsack re-solve (see
+:class:`~repro.serve.backends.HostFailure`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+from repro.sharding.api import (
+    AxisRules,
+    MeshAxes,
+    default_axis_rules,
+    host_mesh,
+    partition_devices,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSpec:
+    """One logical host: an id plus the devices it owns (possibly none —
+    a logical-only plan routes identically without touching jax)."""
+
+    host_id: int
+    devices: Tuple = ()
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemberPlacement:
+    """Where one pool member runs.
+
+    ``hosts`` lists replica hosts in preference order (primary first);
+    ``mesh_axes`` optionally overrides the logical→mesh axis rules for
+    this member's generation (e.g. a big member sharding ``mlp`` over the
+    whole host while a small one replicates); ``weight`` is the placer's
+    balance metric (bf16 parameter bytes)."""
+
+    member_idx: int
+    hosts: Tuple[int, ...]
+    weight: float = 0.0
+    mesh_axes: Optional[Mapping[str, MeshAxes]] = None
+
+
+def _member_weight(spec) -> float:
+    """bf16 parameter bytes — the VRAM footprint, and (×2 FLOPs/param/token
+    under Kaplan) the cost proxy the greedy placer balances."""
+    params_b = getattr(spec, "params_b", None)
+    if params_b is None:
+        return 1.0
+    return float(params_b) * 1e9 * 2.0
+
+
+class PlacementPlan:
+    """Assignment of pool members onto logical hosts (with optional meshes)."""
+
+    def __init__(self, hosts: Sequence[HostSpec],
+                 placements: Sequence[MemberPlacement]):
+        if not hosts:
+            raise ValueError("a placement plan needs at least one host")
+        self.hosts = list(hosts)
+        self.placements = list(placements)
+        host_ids = {h.host_id for h in self.hosts}
+        if len(host_ids) != len(self.hosts):
+            raise ValueError("duplicate host ids in plan")
+        for p in self.placements:
+            if not p.hosts:
+                raise ValueError(f"member {p.member_idx} placed on no host")
+            missing = [h for h in p.hosts if h not in host_ids]
+            if missing:
+                raise ValueError(
+                    f"member {p.member_idx} placed on unknown hosts {missing}")
+            if len(set(p.hosts)) != len(p.hosts):
+                raise ValueError(
+                    f"member {p.member_idx} has duplicate replica hosts")
+        self.dead_hosts: Set[int] = set()
+        self._mesh_cache: Dict[int, object] = {}
+
+    # -- constructors ---------------------------------------------------
+    @classmethod
+    def auto(cls, pool: Sequence, n_hosts: int, replicas: int = 1,
+             devices: Optional[Sequence] = None,
+             mesh_axes: Optional[Mapping[int, Mapping[str, MeshAxes]]] = None,
+             ) -> "PlacementPlan":
+        """Greedy balanced placement of ``pool`` over ``n_hosts`` hosts.
+
+        Members are placed heaviest-first; each replica goes to the
+        least-loaded host not already holding one (load = Σ placed member
+        weight).  Ties break toward the lower host id, so the plan is a
+        pure function of the pool — two processes building it agree
+        without coordination."""
+        if n_hosts < 1:
+            raise ValueError("n_hosts must be >= 1")
+        if not 1 <= replicas <= n_hosts:
+            raise ValueError(f"replicas={replicas} must be in [1, {n_hosts}]")
+        groups = (partition_devices(devices, n_hosts) if devices
+                  else ((),) * n_hosts)
+        hosts = [HostSpec(h, groups[h]) for h in range(n_hosts)]
+        load = [0.0] * n_hosts
+        order = sorted(range(len(pool)),
+                       key=lambda j: (-_member_weight(pool[j]), j))
+        chosen: Dict[int, Tuple[int, ...]] = {}
+        for j in order:
+            w = _member_weight(pool[j])
+            picked: List[int] = []
+            for _ in range(replicas):
+                h = min((h for h in range(n_hosts) if h not in picked),
+                        key=lambda h: (load[h], h))
+                picked.append(h)
+                load[h] += w
+            chosen[j] = tuple(picked)
+        placements = [
+            MemberPlacement(j, chosen[j], weight=_member_weight(pool[j]),
+                            mesh_axes=(mesh_axes or {}).get(j))
+            for j in range(len(pool))
+        ]
+        return cls(hosts, placements)
+
+    @classmethod
+    def round_robin(cls, n_members: int, n_hosts: int,
+                    devices: Optional[Sequence] = None) -> "PlacementPlan":
+        groups = (partition_devices(devices, n_hosts) if devices
+                  else ((),) * n_hosts)
+        hosts = [HostSpec(h, groups[h]) for h in range(n_hosts)]
+        placements = [MemberPlacement(j, (j % n_hosts,))
+                      for j in range(n_members)]
+        return cls(hosts, placements)
+
+    # -- queries --------------------------------------------------------
+    @property
+    def n_hosts(self) -> int:
+        return len(self.hosts)
+
+    @property
+    def n_members(self) -> int:
+        return len(self.placements)
+
+    def members_on_host(self, host_id: int) -> List[int]:
+        """Members with a replica placed on ``host_id`` (dead or alive)."""
+        return [p.member_idx for p in self.placements if host_id in p.hosts]
+
+    def primary_host(self, member_idx: int) -> Optional[int]:
+        """The first *alive* replica host for a member, or None if every
+        replica's host is dead (the member is unroutable)."""
+        for h in self.placements[member_idx].hosts:
+            if h not in self.dead_hosts:
+                return h
+        return None
+
+    def dead_members(self) -> List[int]:
+        """Members with no surviving replica."""
+        return [p.member_idx for p in self.placements
+                if all(h in self.dead_hosts for h in p.hosts)]
+
+    def alive_members(self) -> List[int]:
+        return [p.member_idx for p in self.placements
+                if any(h not in self.dead_hosts for h in p.hosts)]
+
+    def host_load(self) -> Dict[int, float]:
+        """Σ placed member weight per host — what the greedy placer balances."""
+        load = {h.host_id: 0.0 for h in self.hosts}
+        for p in self.placements:
+            for h in p.hosts:
+                load[h] += p.weight
+        return load
+
+    # -- state changes --------------------------------------------------
+    def mark_host_dead(self, host_id: int) -> List[int]:
+        """Flip one host dead; returns the members this *newly* leaves
+        with no surviving replica (empty if every member placed there
+        fails over to a replica on a surviving host)."""
+        if host_id not in {h.host_id for h in self.hosts}:
+            raise ValueError(f"unknown host {host_id}")
+        before = set(self.dead_members())
+        self.dead_hosts.add(host_id)
+        return sorted(set(self.dead_members()) - before)
+
+    def revive(self) -> None:
+        """Bring every host back (scenario replays start from a clean fleet)."""
+        self.dead_hosts.clear()
+
+    # -- meshes ---------------------------------------------------------
+    def host_mesh(self, host_id: int):
+        """The per-host jax Mesh, or None for a logical-only host."""
+        spec = next(h for h in self.hosts if h.host_id == host_id)
+        if not spec.devices:
+            return None
+        mesh = self._mesh_cache.get(host_id)
+        if mesh is None:
+            mesh = self._mesh_cache[host_id] = host_mesh(spec.devices)
+        return mesh
+
+    def member_rules(self, member_idx: int) -> Optional[AxisRules]:
+        """AxisRules for a member's generation on its primary host, with
+        the member's per-placement axis overrides applied; None when the
+        plan is logical-only or the member is unroutable."""
+        h = self.primary_host(member_idx)
+        if h is None:
+            return None
+        mesh = self.host_mesh(h)
+        if mesh is None:
+            return None
+        return default_axis_rules(mesh, self.placements[member_idx].mesh_axes)
+
+    # -- debugging ------------------------------------------------------
+    def describe(self) -> str:
+        lines = []
+        for h in self.hosts:
+            state = "DEAD" if h.host_id in self.dead_hosts else "up"
+            members = self.members_on_host(h.host_id)
+            lines.append(f"host {h.host_id} [{state}] "
+                         f"devices={h.n_devices} members={members}")
+        return "\n".join(lines)

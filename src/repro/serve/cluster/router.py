@@ -1,0 +1,138 @@
+"""Placement-aware routing of member generation across hosts.
+
+:class:`ClusterRouter` is a :class:`~repro.serve.backends.MemberBackend`
+wrapper: the engine's per-member generation calls arrive here, the
+router resolves the member's *primary* (first alive) replica host from
+the :class:`~repro.serve.cluster.placement.PlacementPlan`, installs that
+host's mesh rules for the duration of the call, and forwards to the
+inner backend — whose per-member jit caches
+(:class:`~repro.serve.dispatch.BucketLadder` buckets) are shared across
+hosts, so routing never costs a recompile.
+
+Failure semantics (the whole-host extension of PR 3's hedged retry):
+
+* an injected or real host fault surfaces as
+  :class:`~repro.serve.backends.HostFailure` carrying the host id;
+* the router marks the host dead in the plan.  Members with a replica on
+  a surviving host **fail over inside the router** — the batch re-serves
+  on the surviving placement and the caller never sees the fault;
+* members left with no surviving replica re-raise the ``HostFailure``
+  with ``member_idxs`` filled in, and the Scheduler re-serves the batch
+  with those members masked out of the knapsack
+  (``EnsembleServer.serve_requests(masked_members=...)``).
+
+Host-level failure *injection* lives here too (``host_failures``): the
+schedule is keyed on per-host dispatch counts — the n-th generation call
+routed to host *h* raises — so a traffic scenario that kills a host is
+exactly replayable, like the member-level
+:class:`~repro.serve.backends.FailureInjector`.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serve.backends import HostFailure, MaxNewTokens, MemberBackend
+from repro.serve.cluster.placement import PlacementPlan
+from repro.sharding.api import axis_rules
+
+
+@dataclasses.dataclass
+class ClusterRouter:
+    """Routes member generation through a placement plan.
+
+    ``host_failures`` maps a host id to the 0-based *dispatch indices*
+    (that host's n-th routed generation call, counted over the router's
+    lifetime) that raise :class:`HostFailure` instead of generating."""
+
+    inner: MemberBackend
+    plan: PlacementPlan
+    host_failures: Dict[int, Sequence[int]] = dataclasses.field(
+        default_factory=dict)
+    stats: Dict[str, int] = dataclasses.field(default_factory=lambda: {
+        "dispatches": 0, "failovers": 0, "host_faults": 0})
+    _host_calls: Dict[int, int] = dataclasses.field(default_factory=dict)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+
+    def __post_init__(self):
+        if self.plan.n_members != self.inner.num_members():
+            raise ValueError(
+                f"plan places {self.plan.n_members} members but the backend "
+                f"serves {self.inner.num_members()}")
+
+    # -- MemberBackend protocol -----------------------------------------
+    def num_members(self) -> int:
+        return self.inner.num_members()
+
+    def generate(self, member_idx: int, records: Sequence,
+                 max_new_tokens: MaxNewTokens) -> List[str]:
+        while True:
+            host = self.plan.primary_host(member_idx)
+            if host is None:
+                # unroutable: every replica host is dead.  The engine
+                # should have masked this member out before generating;
+                # reaching here means the death happened mid-batch.
+                raise HostFailure(
+                    next(iter(self.plan.placements[member_idx].hosts)),
+                    member_idxs=(member_idx,))
+            try:
+                return self._dispatch(host, member_idx, records,
+                                      max_new_tokens)
+            except HostFailure as hf:
+                newly_dead = self.plan.mark_host_dead(hf.host_id)
+                with self._lock:
+                    self.stats["host_faults"] += 1
+                if not newly_dead and self.plan.primary_host(member_idx) is not None:
+                    # every member on the dead host has a surviving
+                    # replica — fail over and re-serve this sub-batch on
+                    # the new primary, invisibly to the caller
+                    with self._lock:
+                        self.stats["failovers"] += 1
+                    continue
+                raise HostFailure(hf.host_id, member_idxs=tuple(newly_dead),
+                                  cause=hf.cause) from hf.cause
+
+    def _dispatch(self, host: int, member_idx: int, records: Sequence,
+                  max_new_tokens: MaxNewTokens) -> List[str]:
+        with self._lock:
+            k = self._host_calls.get(host, 0)
+            self._host_calls[host] = k + 1
+            self.stats["dispatches"] += 1
+        if k in tuple(self.host_failures.get(host, ())):
+            raise HostFailure(host, cause=RuntimeError(
+                f"injected host failure: host {host}, dispatch {k}"))
+        rules = self.plan.member_rules(member_idx)
+        ctx = axis_rules(rules) if rules is not None else contextlib.nullcontext()
+        with ctx:
+            return self.inner.generate(member_idx, records, max_new_tokens)
+
+    def dead_members(self) -> List[int]:
+        """Members with no surviving replica — the Scheduler pre-masks
+        these out of the knapsack for every batch formed after a host
+        death, so only the batch in flight at the fault pays a retry."""
+        return self.plan.dead_members()
+
+    # -- optional protocol hooks forward to the wrapped backend ----------
+    def warm(self, shapes: Sequence) -> None:
+        warm = getattr(self.inner, "warm", None)
+        if callable(warm):
+            warm(shapes)
+
+    def compiles(self) -> int:
+        compiles = getattr(self.inner, "compiles", None)
+        return compiles() if callable(compiles) else 0
+
+    # -- introspection ---------------------------------------------------
+    def split_by_host(self, member_idxs: Sequence[int]
+                      ) -> Dict[Optional[int], Tuple[int, ...]]:
+        """Group members by the host their generation would route to —
+        the per-placement sub-batches of one scheduler batch.  ``None``
+        keys members that cannot route (all replicas dead)."""
+        out: Dict[Optional[int], List[int]] = {}
+        for j in member_idxs:
+            out.setdefault(self.plan.primary_host(j), []).append(j)
+        return {h: tuple(js) for h, js in out.items()}

@@ -1,0 +1,104 @@
+"""Thread-backed batch dispatch with a bounded inbox.
+
+:class:`DispatchWorker` decouples ``Scheduler.submit`` from batch
+service: the scheduler forms batches on the caller's thread (cheap,
+deterministic) and enqueues them here; a single worker thread pops jobs
+FIFO and runs the serve function (engine call + hedged retry).  One
+worker thread — not a pool — is deliberate: FIFO execution keeps batch
+service order identical to the synchronous path, which is what makes
+async traces byte-identical to ``sync=True`` traces (the determinism
+the scenario suite pins).
+
+Backpressure is the bounded inbox: :meth:`try_submit` fails fast when
+the queue is at capacity (the Scheduler turns that into an
+admission-control shed with reason ``backpressure``), while
+:meth:`submit` blocks the producer — the no-admission fallback, where
+slowing the caller is the only brake left.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, List
+
+
+class InboxFull(RuntimeError):
+    """The worker's bounded inbox is at capacity (backpressure signal)."""
+
+
+_STOP = object()
+
+
+class DispatchWorker:
+    """Single-threaded FIFO executor with a bounded inbox."""
+
+    def __init__(self, fn: Callable, capacity: int = 64,
+                 name: str = "dispatch-worker"):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self._fn = fn
+        self.capacity = capacity
+        self._inbox: "queue.Queue" = queue.Queue(maxsize=capacity)
+        self._closed = False
+        self.processed = 0
+        self.max_depth = 0
+        self.errors: List[BaseException] = []  # post-resolution diagnostics
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=name)
+        self._thread.start()
+
+    # -- producer side ---------------------------------------------------
+    def submit(self, job) -> None:
+        """Enqueue a job, blocking while the inbox is full."""
+        if self._closed:
+            raise RuntimeError("worker is closed")
+        self._inbox.put(job)
+        self.max_depth = max(self.max_depth, self._inbox.qsize())
+
+    def try_submit(self, job) -> None:
+        """Enqueue a job or raise :class:`InboxFull` without blocking."""
+        if self._closed:
+            raise RuntimeError("worker is closed")
+        try:
+            self._inbox.put_nowait(job)
+        except queue.Full:
+            raise InboxFull(
+                f"dispatch inbox at capacity ({self.capacity})") from None
+        self.max_depth = max(self.max_depth, self._inbox.qsize())
+
+    def full(self) -> bool:
+        return self._inbox.qsize() >= self.capacity
+
+    @property
+    def depth(self) -> int:
+        """Jobs enqueued or in service right now."""
+        return self._inbox.unfinished_tasks
+
+    def join(self) -> None:
+        """Block until every enqueued job has finished service."""
+        self._inbox.join()
+
+    def close(self) -> None:
+        """Drain, stop the thread, and reject further submits."""
+        if self._closed:
+            return
+        self._closed = True
+        self._inbox.put(_STOP)
+        self._thread.join()
+
+    # -- worker side -----------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            job = self._inbox.get()
+            try:
+                if job is _STOP:
+                    return
+                try:
+                    self._fn(job)
+                except BaseException as exc:  # futures already resolved by fn
+                    self.errors.append(exc)
+                else:
+                    self.processed += 1
+            finally:
+                self._inbox.task_done()

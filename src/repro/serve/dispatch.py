@@ -31,6 +31,7 @@ tuple (see README "Performance").
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
@@ -117,6 +118,11 @@ class _BucketedGenerate:
         self.donate = _donate_default() if donate is None else donate
         self._entries: Dict[Tuple[int, int, int], _Entry] = {}
         self._built = 0  # bucket compiles (fallback compile metric)
+        # one generate at a time per dispatcher: entry caches are donated
+        # (consumed per call), so a caller-thread warm() racing the async
+        # DispatchWorker's generate on the same bucket would hand XLA an
+        # already-consumed buffer
+        self._call_lock = threading.Lock()
         self.stats = {"calls": 0, "padded_rows": 0, "padded_tokens": 0,
                       "direct_calls": 0}
 
@@ -183,18 +189,20 @@ class _BucketedGenerate:
         padded[:b, :s] = tokens
         if bb > b:
             padded[b:] = padded[0]  # replicate a real row; rows are independent
-        entry = self._entry(bb, sb, nb)
-        try:
-            out, entry.cache = entry.fn(self.params, jnp.asarray(padded), entry.cache)
-        except Exception:
-            # with donation active the cache buffer may already be consumed
-            # even though the call failed (e.g. a transient device OOM);
-            # rebuild it so the bucket isn't poisoned for all later traffic
-            entry.cache = self._make_cache(bb, sb, nb)
-            raise
-        self.stats["calls"] += 1
-        self.stats["padded_rows"] += bb - b
-        self.stats["padded_tokens"] += (sb - s) * b
+        with self._call_lock:
+            entry = self._entry(bb, sb, nb)
+            try:
+                out, entry.cache = entry.fn(self.params, jnp.asarray(padded),
+                                            entry.cache)
+            except Exception:
+                # with donation active the cache buffer may already be consumed
+                # even though the call failed (e.g. a transient device OOM);
+                # rebuild it so the bucket isn't poisoned for all later traffic
+                entry.cache = self._make_cache(bb, sb, nb)
+                raise
+            self.stats["calls"] += 1
+            self.stats["padded_rows"] += bb - b
+            self.stats["padded_tokens"] += (sb - s) * b
         return np.asarray(out)[:b, :max_new]
 
     def warm(self, shapes: Iterable[Tuple[int, int, int]]) -> None:

@@ -46,6 +46,7 @@ from repro.data.tokenizer import TOKENIZER
 from repro.models.encdec import EncDecLM
 from repro.serve.api import EnsembleRequest, EnsembleResponse, requests_from_records
 from repro.serve.backends import (
+    HostFailure,
     LiveLMBackend,
     LiveMember,
     MemberBackend,
@@ -185,9 +186,20 @@ class EnsembleServer:
         return make_policy(name, **dict(items))
 
     def _select(self, requests: List[EnsembleRequest], r_hat: np.ndarray,
-                costs: np.ndarray) -> Tuple[np.ndarray, List[str]]:
+                costs: np.ndarray,
+                masked_members: frozenset = frozenset(),
+                ) -> Tuple[np.ndarray, List[str]]:
         """[B, N] mask + per-request policy name, grouping rows that share a
-        resolved policy so each policy is built and vector-selected once."""
+        resolved policy so each policy is built and vector-selected once.
+
+        ``masked_members`` (dead hosts' members) re-solves budget-aware
+        policies over the surviving columns only: the knapsack sees the
+        survivors' costs and an ε budget over the survivors' full-ensemble
+        cost, instead of wasting budget headroom on members that cannot
+        serve.  Policies without an ε constraint (and index-keyed
+        baselines, whose indices address the full pool) run on the full
+        matrix; the caller's exclusion guard strips dead members from
+        their masks afterwards."""
         b, n = r_hat.shape
         groups: Dict[Tuple, Tuple[SelectionPolicy, List[int]]] = {}
         for i, req in enumerate(requests):
@@ -197,10 +209,24 @@ class EnsembleServer:
             groups[key][1].append(i)
         mask = np.zeros((b, n), bool)
         names = [""] * b
+        alive = np.asarray([j for j in range(n) if j not in masked_members],
+                           dtype=np.intp)
         for policy, rows in groups.values():
-            sub = np.asarray(
-                policy.select(jnp.asarray(r_hat[rows]), jnp.asarray(costs[rows]))
+            resolve_masked = (
+                bool(masked_members)
+                and isinstance(getattr(policy, "eps", None), EpsilonConstraint)
             )
+            if resolve_masked:
+                picked = np.asarray(policy.select(
+                    jnp.asarray(r_hat[rows][:, alive]),
+                    jnp.asarray(costs[rows][:, alive]),
+                ))
+                sub = np.zeros((len(rows), n), bool)
+                sub[:, alive] = picked
+            else:
+                sub = np.asarray(
+                    policy.select(jnp.asarray(r_hat[rows]), jnp.asarray(costs[rows]))
+                )
             for local, i in enumerate(rows):
                 mask[i] = sub[local]
                 names[i] = policy.name
@@ -226,7 +252,9 @@ class EnsembleServer:
                 texts = self.backend.generate(
                     j, [records[i] for i in rows], [max_new_per_row[i] for i in rows]
                 )
-            except MemberFailure:
+            except (MemberFailure, HostFailure):
+                # already attributed (member-level, or a whole placement
+                # host via the cluster router) — let the Scheduler hedge
                 raise
             except Exception as exc:
                 # attribute the fault to the member so the Scheduler can
@@ -297,6 +325,7 @@ class EnsembleServer:
         self,
         requests: List[EnsembleRequest],
         exclude_members: frozenset = frozenset(),
+        masked_members: frozenset = frozenset(),
     ) -> List[EnsembleResponse]:
         """Serve one admission micro-batch of requests (the Scheduler's path).
 
@@ -304,7 +333,11 @@ class EnsembleServer:
         selection *after* the policy runs (hedged retry around a down
         member); requests whose selection never touched the excluded
         members produce byte-identical responses with or without the
-        exclusion."""
+        exclusion.  ``masked_members`` (members dead with their placement
+        host — see :class:`~repro.serve.backends.HostFailure`) goes
+        further: budget-aware policies re-solve their knapsack over the
+        surviving members only, so the ε budget re-targets the survivors'
+        full-ensemble cost instead of carrying dead members' costs."""
         if not requests:
             return []
         t_start = time.perf_counter()
@@ -317,9 +350,12 @@ class EnsembleServer:
 
         costs = query_cost_matrix(self.pool, records)
         t0 = time.perf_counter()
-        mask, policy_names = self._select(requests, r_hat, costs)
-        if exclude_members:
-            mask = self._apply_exclusions(mask, costs, frozenset(exclude_members))
+        masked = frozenset(masked_members)
+        mask, policy_names = self._select(requests, r_hat, costs,
+                                          masked_members=masked)
+        dropped = frozenset(exclude_members) | masked
+        if dropped:
+            mask = self._apply_exclusions(mask, costs, dropped)
         t_select = time.perf_counter() - t0
 
         max_new_per_row = [

@@ -19,25 +19,50 @@ frontend is deadline- and budget-aware:
   ``ResponseFuture.result()`` dispatches *only the batches up to and
   including the one containing that future* — it never force-flushes
   other submitters' young requests.
+* **Async dispatch** — ``sync=False`` moves batch *service* (the engine
+  call and its hedged retries) onto a
+  :class:`~repro.serve.cluster.DispatchWorker` thread with a bounded
+  inbox: batch formation stays on the caller's thread, so ``submit``
+  returns as soon as the batch is enqueued and never blocks on a batch.
+  The worker executes batches FIFO and every event carries the logical
+  tick its batch was *dispatched* at, so the event trace is byte-
+  identical to the ``sync=True`` path (pinned per preset scenario by
+  ``tests/test_serve_cluster.py``).  Errors surface at ``result()``
+  instead of propagating from ``submit``/``tick``.
 * **Admission control** — the paper's per-query ε-constraint lifted to a
   rolling per-window fleet budget: realized cost (from
   ``EnsembleResponse.realized_cost``) over the last ``window_ticks`` is
   compared to the full-ensemble cost of the same window; past the soft
   threshold new requests are *downgraded* to a tighter per-request
   budget, past the hard threshold they are *shed* (their future raises
-  :class:`RequestShed` — resolved, never hung).
+  :class:`RequestShed` — resolved, never hung).  With
+  ``deadline_aware=True`` a request whose predicted queue delay (EWMA of
+  recent inter-dispatch gaps × batches ahead of it) already exceeds its
+  ``deadline_ticks`` is shed at admission — reason ``deadline`` — instead
+  of being served late.  In async mode a full worker inbox sheds with
+  reason ``backpressure`` — checked before anything waits, at admission
+  and again at dispatch time — while the threshold decisions read
+  realized-cost feedback and so synchronize with in-flight batches
+  first (the documented feedback sync point — an admission-free
+  scheduler never blocks, except on the bounded inbox itself).
 * **Hedged retry** — when a :class:`~repro.serve.backends.MemberFailure`
   escapes the engine mid-batch, the batch is re-served with the failed
   member excluded (``serve_requests(..., exclude_members=...)``) instead
-  of failing every sibling future.  Generation is deterministic and
-  side-effect-free per call, so the retry is exact, and requests that
-  never selected the failed member get byte-identical responses.
+  of failing every sibling future.  A whole-host death
+  (:class:`~repro.serve.backends.HostFailure`, raised by the cluster
+  router when a host takes its last replicas down) escalates the same
+  way, but re-serves with the dead members *masked out of the knapsack*
+  (``masked_members=``): budget-aware policies re-solve over the
+  survivors' costs.  Generation is deterministic and side-effect-free
+  per call, so retries are exact, and requests that never selected the
+  failed members get byte-identical responses.
 
 Because the engine's request path is deterministic per request (see
 ``SimBackend``) and batch-position-invariant, a stream served through
-this scheduler — under any batching, deadlines, or hedging — produces
-byte-identical fused responses to one offline ``EnsembleServer.serve``
-call over the same records (``tests/test_traffic_scenarios.py``).
+this scheduler — under any batching, deadlines, hedging, or dispatch
+mode — produces byte-identical fused responses to one offline
+``EnsembleServer.serve`` call over the same records
+(``tests/test_traffic_scenarios.py``, ``tests/test_serve_cluster.py``).
 
 ``events`` records every arrival / dispatch / completion / shed / hedge /
 deadline-miss as a flat dict — the replayable trace the traffic
@@ -48,10 +73,12 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from typing import Dict, List, Optional, Tuple
 
 from repro.serve.api import EnsembleRequest, EnsembleResponse
-from repro.serve.backends import MemberFailure
+from repro.serve.backends import HostFailure, MemberFailure
+from repro.serve.cluster.worker import DispatchWorker, InboxFull
 from repro.serve.dispatch import BucketLadder
 from repro.serve.engine import EnsembleServer
 
@@ -60,7 +87,7 @@ _NO_DEADLINE = float("inf")
 
 class RequestShed(RuntimeError):
     """Raised by ``ResponseFuture.result()`` when admission control shed
-    the request (fleet-level cost budget exceeded)."""
+    the request (fleet budget, hopeless deadline, or backpressure)."""
 
 
 def _digest(text: str) -> str:
@@ -77,6 +104,7 @@ class ResponseFuture:
         self._response: Optional[EnsembleResponse] = None
         self._error: Optional[BaseException] = None
         self._done = False
+        self._resolved = threading.Event()
         self.deadline_missed = False  # dispatched after its deadline tick
 
     def done(self) -> bool:
@@ -85,16 +113,21 @@ class ResponseFuture:
     def shed(self) -> bool:
         return isinstance(self._error, RequestShed)
 
-    def result(self) -> EnsembleResponse:
+    def result(self, timeout: Optional[float] = None) -> EnsembleResponse:
         """The response, dispatching this future's own batch if pending.
 
         Only batches up to and including the one containing this request
         are dispatched — other policy groups and younger same-group
-        requests stay queued for their own triggers.  Raises the engine's
-        exception if the batch failed, or :class:`RequestShed` if
-        admission control dropped the request."""
+        requests stay queued for their own triggers.  In async mode the
+        call blocks until the worker has served the batch (``timeout``
+        in seconds bounds the wait).  Raises the engine's exception if
+        the batch failed, or :class:`RequestShed` if admission control
+        dropped the request."""
         if not self._done:
             self._scheduler._dispatch_for(self)
+            if not self._resolved.wait(timeout):
+                raise TimeoutError(
+                    f"request {self.seq} not served within {timeout}s")
         if self._error is not None:
             raise self._error
         assert self._response is not None
@@ -103,15 +136,17 @@ class ResponseFuture:
     def _set(self, response: EnsembleResponse) -> None:
         self._response = response
         self._done = True
+        self._resolved.set()
 
     def _fail(self, error: BaseException) -> None:
         self._error = error
         self._done = True
+        self._resolved.set()
 
 
 @dataclasses.dataclass(frozen=True)
 class AdmissionControl:
-    """Rolling fleet-level ε: per-window realized/full cost thresholds.
+    """Rolling fleet-level ε plus deadline-feasibility admission.
 
     Over the trailing ``window_ticks`` scheduler ticks, the realized
     member cost of every served request is summed against the
@@ -120,12 +155,30 @@ class AdmissionControl:
     window fraction reaches ``downgrade_fraction``, newly submitted
     requests have their per-request budget tightened to
     ``downgrade_budget``; at ``shed_fraction`` they are shed outright.
-    ``None`` disables a threshold."""
+    ``None`` disables a threshold.
+
+    ``deadline_aware=True`` additionally sheds requests that cannot make
+    their deadline: the scheduler keeps an EWMA (smoothing
+    ``service_alpha``) of recent inter-dispatch gaps in ticks — how many
+    ticks one batch of service currently costs — and predicts a new
+    request's queue delay as that EWMA times the number of batches ahead
+    of it.  A request whose ``deadline_ticks`` is below the prediction is
+    shed at admission (event reason ``deadline``) rather than served
+    past-deadline.  Requests without a deadline are never deadline-shed."""
 
     window_ticks: int = 8
     downgrade_fraction: Optional[float] = None  # soft: tighten request budgets
     downgrade_budget: float = 0.1  # ε applied to downgraded requests
     shed_fraction: Optional[float] = None  # hard: reject new requests
+    deadline_aware: bool = False  # shed requests that cannot make their deadline
+    service_alpha: float = 0.5  # EWMA smoothing for inter-dispatch gap ticks
+
+    def needs_feedback(self) -> bool:
+        """Whether admission decisions read served-batch feedback (and so
+        must synchronize with in-flight batches in async mode)."""
+        return (self.downgrade_fraction is not None
+                or self.shed_fraction is not None
+                or self.deadline_aware)
 
 
 @dataclasses.dataclass
@@ -144,6 +197,22 @@ class _Pending:
         return (d, -self.priority, self.seq)
 
 
+@dataclasses.dataclass
+class _BatchJob:
+    """One formed batch, ready for service (inline or on the worker).
+
+    ``dispatch_tick`` freezes the logical clock at formation time: every
+    event, deadline-miss decision, and ledger entry the service produces
+    is stamped with it, so the trace is identical whether the engine call
+    runs inline or finishes on the worker thread several ticks later.
+    ``events`` is this batch's pre-reserved slot in the scheduler's event
+    log — the worker appends into it without racing later arrivals."""
+
+    batch: List[_Pending]
+    dispatch_tick: int
+    events: List[dict]
+
+
 class Scheduler:
     """Deadline-aware continuous-batching front-end over an EnsembleServer."""
 
@@ -151,7 +220,8 @@ class Scheduler:
                  max_wait_ticks: int = 4,
                  admission: Optional[AdmissionControl] = None,
                  ladder: Optional[BucketLadder] = None,
-                 hedge: bool = True, record_events: bool = True):
+                 hedge: bool = True, record_events: bool = True,
+                 sync: bool = True, inbox_capacity: int = 64):
         if max_batch_size < 1:
             raise ValueError("max_batch_size must be >= 1")
         self.server = server
@@ -161,6 +231,7 @@ class Scheduler:
         self.ladder = ladder or getattr(server, "bucket_ladder", None) or BucketLadder()
         self.hedge = hedge
         self.record_events = record_events
+        self.sync = sync
         self.now = 0
         self._seq = 0
         self.last_submitted: Optional[ResponseFuture] = None
@@ -168,17 +239,45 @@ class Scheduler:
         # (tick, realized_flops, full_ensemble_flops) per served request —
         # the admission window's ledger
         self._ledger: List[Tuple[int, float, float]] = []
-        self.events: List[dict] = []
+        # event log: flat dicts for submit-side events, one nested list per
+        # dispatched batch (the batch's slot, reserved in dispatch order and
+        # filled by whichever thread serves it) — see the `events` property
+        self._events: List = []
+        self._lock = threading.Lock()
+        self._service_ewma: Optional[float] = None  # inter-dispatch gap ticks
+        self._last_dispatch_tick: Optional[int] = None
+        self._worker: Optional[DispatchWorker] = None
+        if not sync:
+            self._worker = DispatchWorker(self._serve_batch,
+                                          capacity=inbox_capacity)
         self.stats = {
             "submitted": 0, "dispatched_batches": 0, "dispatched_requests": 0,
             "shed": 0, "downgraded": 0, "deadline_misses": 0,
-            "hedges": 0, "hedged_requests": 0, "padded_rows": 0,
+            "hedges": 0, "host_hedges": 0, "hedged_requests": 0,
+            "padded_rows": 0,
         }
 
     # ------------------------------------------------------------------
+    @property
+    def events(self) -> List[dict]:
+        """The flat event trace: batch slots flatten in dispatch order, so
+        the sequence is deterministic regardless of dispatch mode."""
+        out: List[dict] = []
+        for e in self._events:
+            if isinstance(e, list):
+                out.extend(e)
+            else:
+                out.append(e)
+        return out
+
     def _event(self, event: str, **fields) -> None:
         if self.record_events:
-            self.events.append({"tick": self.now, "event": event, **fields})
+            self._events.append({"tick": self.now, "event": event, **fields})
+
+    def _event_to(self, target: List[dict], tick: int, event: str,
+                  **fields) -> None:
+        if self.record_events:
+            target.append({"tick": tick, "event": event, **fields})
 
     # -- admission window ----------------------------------------------
     def _window_ticks(self) -> int:
@@ -187,12 +286,31 @@ class Scheduler:
     def window_cost_fraction(self) -> float:
         """Realized/full-ensemble cost over the trailing admission window."""
         floor = self.now - self._window_ticks()
+        with self._lock:
+            ledger = list(self._ledger)
         realized = full = 0.0
-        for tick, r, f in self._ledger:
+        for tick, r, f in ledger:
             if tick > floor:
                 realized += r
                 full += f
         return realized / full if full > 0 else 0.0
+
+    def predicted_queue_delay(self) -> float:
+        """Predicted ticks a request submitted now waits before dispatch:
+        the inter-dispatch-gap EWMA times the batches queued ahead of it.
+        0 until the first gap is observed (an idle scheduler admits)."""
+        with self._lock:
+            ewma = self._service_ewma
+        if ewma is None:
+            return 0.0
+        batches_ahead = len(self._queue) // self.max_batch_size + 1
+        return ewma * batches_ahead
+
+    def _shed(self, future: ResponseFuture, reason: str, detail: str,
+              **fields) -> None:
+        self.stats["shed"] += 1
+        self._event("shed", req=future.seq, reason=reason, **fields)
+        future._fail(RequestShed(detail))
 
     def _admit(self, request: EnsembleRequest,
                future: ResponseFuture) -> Optional[EnsembleRequest]:
@@ -201,15 +319,38 @@ class Scheduler:
         ac = self.admission
         if ac is None:
             return request
+        if self._worker is not None and self._worker.full():
+            # backpressure first: when the inbox is already full, shedding
+            # must not wait on the feedback sync point below (the most
+            # loaded moment is exactly when waiting hurts most)
+            self._shed(
+                future, "backpressure",
+                f"dispatch inbox at capacity ({self._worker.capacity})")
+            return None
+        if self._worker is not None and ac.needs_feedback():
+            # feedback sync point: thresholds compare against realized
+            # cost and service-gap EWMAs, which in-flight batches are
+            # still producing — wait for them so sync and async modes
+            # make identical admission decisions
+            self._worker.join()
         frac = self.window_cost_fraction()
         if ac.shed_fraction is not None and frac >= ac.shed_fraction:
-            self.stats["shed"] += 1
-            self._event("shed", req=future.seq, window_fraction=frac)
-            future._fail(RequestShed(
+            self._shed(
+                future, "budget",
                 f"admission window at {frac:.2f} of full-ensemble cost "
-                f"(>= shed threshold {ac.shed_fraction:.2f})"
-            ))
+                f"(>= shed threshold {ac.shed_fraction:.2f})",
+                window_fraction=frac)
             return None
+        if ac.deadline_aware and request.deadline_ticks is not None:
+            predicted = self.predicted_queue_delay()
+            if predicted > request.deadline_ticks:
+                self._shed(
+                    future, "deadline",
+                    f"predicted queue delay {predicted:.1f} ticks exceeds "
+                    f"deadline {request.deadline_ticks}",
+                    predicted_delay=predicted,
+                    deadline_ticks=request.deadline_ticks)
+                return None
         if (ac.downgrade_fraction is not None and frac >= ac.downgrade_fraction
                 and (request.budget is None or request.budget > ac.downgrade_budget)):
             self.stats["downgraded"] += 1
@@ -224,7 +365,9 @@ class Scheduler:
 
         The request's policy override is fully resolved here (name, kwargs,
         budget), so a malformed request is rejected before it can poison a
-        micro-batch shared with other submitters."""
+        micro-batch shared with other submitters.  In async mode a full
+        policy group only *enqueues* its batch — the call never waits for
+        the engine."""
         self.last_submitted: Optional[ResponseFuture] = None
         key = self.server._policy_key(request)
         hash(key)  # unhashable policy_kwargs values would break grouping
@@ -285,9 +428,26 @@ class Scheduler:
                 group, forced=min(len(group), self.max_batch_size))
         return served
 
+    def join(self) -> None:
+        """Wait until every dispatched batch has been served.  A no-op in
+        sync mode, where dispatch and service are the same step."""
+        if self._worker is not None:
+            self._worker.join()
+
+    def close(self) -> None:
+        """Stop the dispatch worker (async mode).  Queued-but-undispatched
+        requests stay queued; in-flight batches finish first."""
+        if self._worker is not None:
+            self._worker.close()
+
     @property
     def pending(self) -> int:
         return len(self._queue)
+
+    @property
+    def in_flight(self) -> int:
+        """Batches dispatched but not yet served (always 0 in sync mode)."""
+        return self._worker.depth if self._worker is not None else 0
 
     # ------------------------------------------------------------------
     def _urgent(self, p: _Pending) -> bool:
@@ -312,14 +472,20 @@ class Scheduler:
     def _dispatch_for(self, future: ResponseFuture) -> None:
         """Dispatch batches from this future's policy group — in EDF order,
         so same-group requests ahead of it ride along — until the batch
-        containing it has been served.  Other groups are left queued."""
+        containing it has been dispatched.  Other groups are left queued.
+        In async mode the batch may still be in flight on return; the
+        future's event resolves it (``result()`` waits on it)."""
         while not future.done():
             entry = next((p for p in self._queue if p.future is future), None)
-            if entry is None:  # resolved concurrently or never queued
+            if entry is None:  # in flight, resolved concurrently, or never queued
                 break
             group = self._group(entry.key)
             ahead = group.index(entry) + 1  # everything up to and incl. it
             self._dispatch_group(group, forced=min(ahead, self.max_batch_size))
+        if self._worker is None and not future.done():
+            # sync mode must resolve before returning; the event-based wait
+            # in result() would deadlock on a future nobody will serve
+            raise RuntimeError(f"request {future.seq} failed to dispatch")
 
     # ------------------------------------------------------------------
     def _take_count(self, available: int, forced: int) -> int:
@@ -336,65 +502,157 @@ class Scheduler:
         return max(self.ladder.floor_batch_rung(available), forced, 1)
 
     def _dispatch_group(self, group: List[_Pending], forced: int) -> int:
-        """Serve the front of one policy group; returns requests served."""
+        """Pop the front of one policy group into a batch job and hand it
+        to service — inline in sync mode, the worker's inbox otherwise.
+        Returns requests dispatched."""
         if not group:
             return 0
         take = self._take_count(len(group), forced)
         batch = group[:take]
         members = set(id(p) for p in batch)
         self._queue = [p for p in self._queue if id(p) not in members]
+        job = _BatchJob(batch=batch, dispatch_tick=self.now, events=[])
+        if self.record_events:
+            self._events.append(job.events)  # reserve the trace slot now
+        if self._worker is None:
+            self._serve_batch(job)
+        else:
+            try:
+                if self.admission is not None:
+                    # admission-controlled: never block on a full inbox —
+                    # shed the batch with the backpressure reason instead
+                    # (closes the admit-time-check / dispatch-time race)
+                    self._worker.try_submit(job)
+                else:
+                    # no admission: the bounded put blocking the producer
+                    # is the only brake left
+                    self._worker.submit(job)
+            except InboxFull:
+                shed = RequestShed(
+                    f"backpressure: dispatch inbox at capacity "
+                    f"({self._worker.capacity})")
+                with self._lock:
+                    self.stats["shed"] += len(batch)
+                for p in batch:
+                    self._event_to(job.events, job.dispatch_tick, "shed",
+                                   req=p.seq, reason="backpressure")
+                    p.future._fail(shed)
+            except RuntimeError as exc:
+                # worker closed: resolve the popped batch's futures with
+                # the cause rather than leaving them pending forever
+                for p in batch:
+                    p.future._fail(exc)
+                raise
+        return len(batch)
+
+    def _serve_batch(self, job: _BatchJob) -> None:
+        """Serve one formed batch: the engine call plus hedged retries.
+        Runs inline (sync) or on the worker thread (async); every tick
+        stamp uses ``job.dispatch_tick``, so both modes write the same
+        trace."""
+        batch, tick = job.batch, job.dispatch_tick
         exclude: frozenset = frozenset()
+        # pre-mask members already known dead (a cluster backend's plan
+        # records host deaths), so only the batch in flight at the fault
+        # pays a retry — later batches route around the dead host from
+        # the start
+        dead_hook = getattr(self.server.backend, "dead_members", None)
+        masked: frozenset = (frozenset(dead_hook()) if callable(dead_hook)
+                             else frozenset())
         reqs = [p.request for p in batch]
+        pool_n = self.server.backend.num_members()
+        if len(masked) >= pool_n:
+            # total outage: every member's placement is dead — fail the
+            # batch with a clear cause instead of handing the engine an
+            # empty pool to select from
+            exc = RuntimeError(
+                "no servable pool members: every placement host is dead")
+            for p in batch:
+                p.future._fail(exc)
+            raise exc
         while True:
             try:
-                if exclude:
+                if exclude or masked:
                     responses = self.server.serve_requests(
-                        reqs, exclude_members=exclude)
+                        reqs, exclude_members=exclude, masked_members=masked)
                 else:
                     responses = self.server.serve_requests(reqs)
                 break
             except MemberFailure as mf:
-                pool_n = self.server.backend.num_members()
-                if not self.hedge or len(exclude) + 1 >= pool_n:
+                if not self.hedge or len(exclude | masked) + 1 >= pool_n:
                     for p in batch:
                         p.future._fail(mf)
                     raise
                 exclude = exclude | {mf.member_idx}
-                self.stats["hedges"] += 1
-                self.stats["hedged_requests"] += len(batch)
-                self._event("hedge", member=mf.member_idx,
-                            reqs=[p.seq for p in batch],
-                            exclude=sorted(exclude))
+                with self._lock:
+                    self.stats["hedges"] += 1
+                    self.stats["hedged_requests"] += len(batch)
+                self._event_to(job.events, tick, "hedge", member=mf.member_idx,
+                               reqs=[p.seq for p in batch],
+                               exclude=sorted(exclude))
+            except HostFailure as hf:
+                dead = frozenset(hf.member_idxs)
+                survivors_left = len(exclude | masked | dead) < pool_n
+                # `dead <= masked` means no progress: a host that keeps
+                # failing without newly killing members would retry forever
+                if (not self.hedge or not dead or not survivors_left
+                        or dead <= masked):
+                    for p in batch:
+                        p.future._fail(hf)
+                    raise
+                masked = masked | dead
+                with self._lock:
+                    self.stats["host_hedges"] += 1
+                    self.stats["hedged_requests"] += len(batch)
+                self._event_to(job.events, tick, "host_hedge",
+                               host=hf.host_id, members=sorted(dead),
+                               reqs=[p.seq for p in batch],
+                               masked=sorted(masked))
             except Exception as exc:
                 # the batch is already popped; resolve every sibling future
                 # with the cause instead of leaving them pending forever
                 for p in batch:
                     p.future._fail(exc)
                 raise
-        self._event("dispatch", reqs=[p.seq for p in batch], size=len(batch),
-                    bucket=self.ladder.batch_bucket(len(batch)),
-                    exclude=sorted(exclude))
-        self.stats["padded_rows"] += (
-            self.ladder.batch_bucket(len(batch)) - len(batch))
+        self._event_to(job.events, tick, "dispatch",
+                       reqs=[p.seq for p in batch], size=len(batch),
+                       bucket=self.ladder.batch_bucket(len(batch)),
+                       exclude=sorted(exclude), masked=sorted(masked))
+        ledger_rows = []
         for p, response in zip(batch, responses):
-            p.future._set(response)
-            missed = (p.deadline_tick is not None and self.now > p.deadline_tick)
+            missed = (p.deadline_tick is not None and tick > p.deadline_tick)
             if missed:
                 p.future.deadline_missed = True
-                self.stats["deadline_misses"] += 1
-                self._event("miss", req=p.seq, deadline=p.deadline_tick)
+            p.future._set(response)
             # full-ensemble cost backed out of the realized fraction keeps
             # the ledger exact for any policy without a second cost pass
             full = (response.realized_cost / response.cost_fraction
                     if response.cost_fraction > 0 else 0.0)
-            self._ledger.append((self.now, response.realized_cost, full))
-            self._event("complete", req=p.seq,
-                        latency_ticks=self.now - p.arrive_tick,
-                        missed=missed, text_digest=_digest(response.text))
-        self.stats["dispatched_batches"] += 1
-        self.stats["dispatched_requests"] += len(batch)
-        # entries older than the window can never matter again — prune so
-        # the ledger stays O(window), not O(session)
-        floor = self.now - self._window_ticks()
-        self._ledger = [e for e in self._ledger if e[0] > floor]
-        return len(batch)
+            ledger_rows.append((tick, response.realized_cost, full))
+            if missed:
+                self._event_to(job.events, tick, "miss", req=p.seq,
+                               deadline=p.deadline_tick)
+            self._event_to(job.events, tick, "complete", req=p.seq,
+                           latency_ticks=tick - p.arrive_tick,
+                           missed=missed, text_digest=_digest(response.text))
+        with self._lock:
+            self.stats["deadline_misses"] += sum(
+                1 for p in batch if p.future.deadline_missed)
+            self.stats["padded_rows"] += (
+                self.ladder.batch_bucket(len(batch)) - len(batch))
+            self.stats["dispatched_batches"] += 1
+            self.stats["dispatched_requests"] += len(batch)
+            self._ledger.extend(ledger_rows)
+            # entries older than the window can never matter again — prune
+            # so the ledger stays O(window), not O(session)
+            floor = tick - self._window_ticks()
+            self._ledger = [e for e in self._ledger if e[0] > floor]
+            # inter-dispatch gap EWMA: the deadline-aware admission's
+            # service-time estimate (first dispatch seeds the clock only)
+            if self._last_dispatch_tick is not None and self.admission:
+                gap = float(tick - self._last_dispatch_tick)
+                a = self.admission.service_alpha
+                self._service_ewma = (
+                    gap if self._service_ewma is None
+                    else a * gap + (1.0 - a) * self._service_ewma)
+            self._last_dispatch_tick = tick

@@ -2,21 +2,31 @@
 
 Discrete-event load generator over the continuous-batching
 :class:`~repro.serve.scheduler.Scheduler`: a :class:`Scenario` describes
-an arrival process (steady / bursty / heavy-tail), a weighted mix of
-per-request overrides (policy, budget, priority, deadline), and an
-optional failure-injection schedule; :class:`TrafficSimulator` drives the
-scheduler tick-by-tick and returns a :class:`TrafficReport` with
-per-request latencies, deadline-miss and shed counters, and the
-scheduler's full event trace.
+an arrival process (steady / bursty / heavy-tail / diurnal), a weighted
+mix of per-request overrides (policy, budget, priority, deadline), and
+optional failure-injection schedules — per-member call faults
+(:class:`~repro.serve.backends.FailureInjector`) and whole-host outages
+(routed through a :class:`~repro.serve.cluster.ClusterRouter` over an
+auto-built :class:`~repro.serve.cluster.PlacementPlan`);
+:class:`TrafficSimulator` drives the scheduler tick-by-tick and returns
+a :class:`TrafficReport` with per-request latencies, deadline-miss and
+shed counters, and the scheduler's full event trace.
 
 Everything is deterministic given ``Scenario.seed``: arrival ticks, mix
 draws, simulated member responses (``SimBackend`` keys its RNG on the
 query, not the batch), and injected failures (keyed on per-member call
-counts, not wall time).  Two runs of the same scenario produce identical
-traces — ``TrafficReport.trace`` is replayable byte for byte — and the
-fused responses are byte-identical to one offline
+counts and per-host dispatch counts, not wall time).  Two runs of the
+same scenario produce identical traces — ``TrafficReport.trace`` is
+replayable byte for byte, in both sync and async dispatch modes — and
+the fused responses are byte-identical to one offline
 ``EnsembleServer.serve_requests`` call over the same requests, which is
 what ``tests/test_traffic_scenarios.py`` pins.
+
+Beyond the logical clock, every run records ``arrival_wall_ns`` per
+request — the monotonic wall-clock instant it was submitted — so a
+production run's arrival process can be captured
+(:meth:`TrafficReport.captured`) and re-driven against a new build with
+:meth:`TrafficSimulator.replay`, optionally time-scaled.
 
 The simulator is both the load generator behind
 ``benchmarks/serve_bench.py --scenario ...`` and the engine of the
@@ -34,7 +44,10 @@ import numpy as np
 from repro.data.mixinstruct import Record
 from repro.serve.api import EnsembleRequest, EnsembleResponse
 from repro.serve.backends import FailureInjector
+from repro.serve.cluster import ClusterRouter, PlacementPlan
 from repro.serve.scheduler import Scheduler
+
+DEFAULT_HOSTS = 4  # hosts for scenarios that inject host faults without a count
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +61,10 @@ class ArrivalProcess:
     * ``heavy-tail`` — inter-arrival gaps drawn from a Pareto
       distribution (shape ``tail_shape``, clamped at ``tail_cap``):
       long quiet stretches punctured by arrival clumps.
+    * ``diurnal`` — a deterministic load curve: the per-tick rate swings
+      sinusoidally around ``rate`` with relative ``amplitude`` over a
+      ``period``-tick day, emitting an arrival whenever the accumulated
+      rate crosses 1 — peak-hour clumps, trough-hour quiet.
     """
 
     kind: str = "steady"
@@ -56,6 +73,8 @@ class ArrivalProcess:
     burst_every: int = 8
     tail_shape: float = 1.2
     tail_cap: int = 32
+    period: int = 24  # diurnal day length, in ticks
+    amplitude: float = 0.8  # diurnal swing as a fraction of `rate`
 
     def arrival_ticks(self, n: int, rng: np.random.Generator) -> List[int]:
         if self.kind == "steady":
@@ -68,9 +87,24 @@ class ArrivalProcess:
                 ticks.append(t)
                 t += min(int(rng.pareto(self.tail_shape)), self.tail_cap)
             return ticks
+        if self.kind == "diurnal":
+            if self.rate <= 0:
+                raise ValueError("diurnal arrivals need rate > 0")
+            ticks: List[int] = []
+            acc, t = 0.0, 0
+            while len(ticks) < n:
+                lam = self.rate * (
+                    1.0 + self.amplitude * float(np.sin(2.0 * np.pi * t / self.period))
+                )
+                acc += max(lam, 0.0)
+                while acc >= 1.0 and len(ticks) < n:
+                    ticks.append(t)
+                    acc -= 1.0
+                t += 1
+            return ticks
         raise ValueError(
             f"unknown arrival kind {self.kind!r}; "
-            "expected 'steady', 'bursty', or 'heavy-tail'"
+            "expected 'steady', 'bursty', 'heavy-tail', or 'diurnal'"
         )
 
 
@@ -84,7 +118,15 @@ class Scenario:
     entry.  ``deadline_ticks`` is the default deadline for requests whose
     mix entry does not set its own.  ``failures`` maps a pool member to
     the 0-based call indices that raise (see
-    :class:`~repro.serve.backends.FailureInjector`)."""
+    :class:`~repro.serve.backends.FailureInjector`).
+
+    ``hosts`` shards the pool over that many logical hosts through a
+    greedy-balanced :class:`~repro.serve.cluster.PlacementPlan` (the
+    simulator wraps the backend in a
+    :class:`~repro.serve.cluster.ClusterRouter`); ``host_failures`` maps
+    a host id to the 0-based *dispatch* indices at which that whole host
+    dies mid-scenario — the correlated-failure counterpart of
+    ``failures``."""
 
     name: str
     arrivals: ArrivalProcess = ArrivalProcess()
@@ -93,6 +135,8 @@ class Scenario:
     mix: Tuple[Tuple[float, Mapping[str, Any]], ...] = ()
     deadline_ticks: Optional[int] = None
     failures: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
+    hosts: Optional[int] = None
+    host_failures: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
 
 
 def build_arrivals(scenario: Scenario,
@@ -121,6 +165,30 @@ def build_arrivals(scenario: Scenario,
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class CapturedTrace:
+    """A replayable arrival capture: the requests of one run plus, per
+    request, the logical tick and the monotonic wall-clock nanosecond at
+    which it was submitted.  This is the artifact a production deployment
+    persists so new builds can be driven by real traffic."""
+
+    name: str
+    requests: Tuple[EnsembleRequest, ...]
+    ticks: Tuple[int, ...]
+    wall_ns: Tuple[int, ...]
+
+    def ns_per_tick(self) -> float:
+        """The capture's own wall-time calibration of one logical tick
+        (0.0 when the capture spans less than one tick or one ns)."""
+        if len(self.ticks) < 2:
+            return 0.0
+        span_ticks = self.ticks[-1] - self.ticks[0]
+        span_ns = self.wall_ns[-1] - self.wall_ns[0]
+        if span_ticks <= 0 or span_ns <= 0:
+            return 0.0
+        return span_ns / span_ticks
+
+
 @dataclasses.dataclass
 class TrafficReport:
     """What one simulated run produced, in arrival order."""
@@ -136,6 +204,8 @@ class TrafficReport:
     stats: Dict[str, int]  # scheduler counters at end of run
     compiles: Dict[str, int]  # engine generate-compile counters
     ticks: int  # total scheduler ticks consumed
+    arrival_ticks: List[int] = dataclasses.field(default_factory=list)
+    arrival_wall_ns: List[int] = dataclasses.field(default_factory=list)
 
     # -- summary metrics -------------------------------------------------
     @property
@@ -166,6 +236,15 @@ class TrafficReport:
                 float(np.percentile(ticks, q)) if ticks else 0.0)
         return out
 
+    def captured(self) -> CapturedTrace:
+        """The run's arrival schedule as a replayable capture."""
+        return CapturedTrace(
+            name=self.scenario,
+            requests=tuple(self.requests),
+            ticks=tuple(self.arrival_ticks),
+            wall_ns=tuple(self.arrival_wall_ns),
+        )
+
 
 class TrafficSimulator:
     """Drives a Scheduler through one Scenario, tick by tick."""
@@ -175,26 +254,68 @@ class TrafficSimulator:
         self.scheduler = scheduler
         self.scenario = scenario
         self.records = list(records)
-        if scenario.failures:
+        if scenario.failures or scenario.host_failures or scenario.hosts:
             # always wrap fresh around the innermost backend: a reused
-            # server keeps neither a previous scenario's schedule nor its
-            # consumed call counters, so replay() stays byte-identical
+            # server keeps neither a previous scenario's schedules nor its
+            # consumed call/dispatch counters nor its dead hosts, so
+            # replay() stays byte-identical
             backend = scheduler.server.backend
-            if isinstance(backend, FailureInjector):
+            while isinstance(backend, (FailureInjector, ClusterRouter)):
                 backend = backend.inner
-            scheduler.server.backend = FailureInjector(
-                backend, failures={m: tuple(calls)
-                                   for m, calls in scenario.failures})
+            if scenario.failures:
+                backend = FailureInjector(
+                    backend, failures={m: tuple(calls)
+                                       for m, calls in scenario.failures})
+            if scenario.host_failures or scenario.hosts:
+                plan = PlacementPlan.auto(scheduler.server.pool,
+                                          n_hosts=scenario.hosts or DEFAULT_HOSTS)
+                backend = ClusterRouter(
+                    backend, plan=plan,
+                    host_failures={h: tuple(calls)
+                                   for h, calls in scenario.host_failures})
+            scheduler.server.backend = backend
 
     def run(self, max_idle_ticks: int = 1000) -> TrafficReport:
+        arrivals = build_arrivals(self.scenario, self.records)
+        return self._drive(arrivals, self.scenario.name, max_idle_ticks)
+
+    @classmethod
+    def replay(cls, scheduler: Scheduler, trace: CapturedTrace,
+               time_scale: float = 1.0,
+               max_idle_ticks: int = 1000) -> TrafficReport:
+        """Re-drive a captured arrival schedule against a (new) scheduler.
+
+        ``time_scale == 1.0`` replays the recorded *logical* ticks
+        verbatim — the byte-identical re-drive the determinism tests pin.
+        Any other scale switches to the recorded wall clock: each
+        request's arrival tick is derived from its captured wall-clock
+        offset via the capture's own ns-per-tick calibration, divided by
+        ``time_scale`` (2.0 = twice as fast, 0.5 = half speed) — so a
+        production capture replays with its real arrival spacing, not the
+        simulator's idealized one."""
+        if time_scale <= 0:
+            raise ValueError("time_scale must be > 0")
+        ns_per_tick = trace.ns_per_tick()
+        if time_scale == 1.0 or ns_per_tick == 0.0:
+            ticks = [int(round(t / time_scale)) for t in trace.ticks]
+        else:
+            t0 = trace.wall_ns[0]
+            ticks = [int((w - t0) / ns_per_tick / time_scale)
+                     for w in trace.wall_ns]
+        sim = cls(scheduler, Scenario(name=f"{trace.name}@x{time_scale:g}"), [])
+        arrivals = list(zip(ticks, trace.requests))
+        return sim._drive(arrivals, sim.scenario.name, max_idle_ticks)
+
+    def _drive(self, arrivals: List[Tuple[int, EnsembleRequest]], name: str,
+               max_idle_ticks: int = 1000) -> TrafficReport:
         """Submit the arrival schedule against the scheduler's clock and
         tick until every future resolves.  Engine-side batch failures are
         recorded per request (futures are always resolved), never raised —
         a scenario run always completes."""
         sched = self.scheduler
-        arrivals = build_arrivals(self.scenario, self.records)
         futures: List = []
         submit_s: List[float] = []
+        wall_ns: List[int] = []
         done_s: List[Optional[float]] = []
         requests = [req for _, req in arrivals]
 
@@ -209,6 +330,7 @@ class TrafficSimulator:
         while idx < len(arrivals) or sched.pending:
             while idx < len(arrivals) and arrivals[idx][0] <= sched.now:
                 submit_s.append(time.perf_counter())
+                wall_ns.append(time.perf_counter_ns())
                 done_s.append(None)
                 try:
                     futures.append(sched.submit(arrivals[idx][1]))
@@ -233,6 +355,7 @@ class TrafficSimulator:
                 raise RuntimeError(
                     f"simulator failed to drain: {sched.pending} requests "
                     f"still pending after {max_idle_ticks} idle ticks")
+        sched.join()  # async mode: wait out in-flight batches
         stamp()
 
         latency_ticks: List[Optional[int]] = [None] * len(futures)
@@ -253,7 +376,7 @@ class TrafficSimulator:
             walls.append(done_s[i] - submit_s[i]
                          if err is None and done_s[i] is not None else None)
         return TrafficReport(
-            scenario=self.scenario.name,
+            scenario=name,
             requests=requests,
             responses=responses,
             errors=errors,
@@ -264,6 +387,8 @@ class TrafficSimulator:
             stats=dict(sched.stats),
             compiles=sched.server.generate_compiles(),
             ticks=sched.now,
+            arrival_ticks=[t for t, _ in arrivals],
+            arrival_wall_ns=wall_ns,
         )
 
 
@@ -276,10 +401,12 @@ def replay(scheduler_factory, scenario: Scenario,
 
 
 def preset_scenarios(n_requests: int = 24, seed: int = 0) -> Dict[str, Scenario]:
-    """The four named scenarios the benchmarks and the scenario test suite
+    """The named scenarios the benchmarks and the scenario test suite
     share.  ``failure`` injects a transient fault on member 3 (one of the
     two members modi@0.2 reliably selects under the default stack seeds),
-    so hedged retry actually fires; every future still resolves."""
+    so hedged retry actually fires; ``host-outage`` kills a whole
+    placement host mid-run, so the host-level hedge (knapsack re-solve
+    over the survivors) fires; every future still resolves."""
     return {
         "steady": Scenario(
             name="steady",
@@ -312,5 +439,21 @@ def preset_scenarios(n_requests: int = 24, seed: int = 0) -> Dict[str, Scenario]
             arrivals=ArrivalProcess("steady", rate=2.0),
             n_requests=n_requests, seed=seed, deadline_ticks=4,
             failures=((3, (1,)),),
+        ),
+        "diurnal": Scenario(
+            name="diurnal",
+            arrivals=ArrivalProcess("diurnal", rate=2.0, period=12,
+                                    amplitude=0.9),
+            n_requests=n_requests, seed=seed, deadline_ticks=2,
+            mix=(
+                (0.8, {}),
+                (0.2, {"budget": 0.5, "priority": 1}),
+            ),
+        ),
+        "host-outage": Scenario(
+            name="host-outage",
+            arrivals=ArrivalProcess("steady", rate=2.0),
+            n_requests=n_requests, seed=seed, deadline_ticks=4,
+            hosts=4, host_failures=((0, (1,)),),
         ),
     }

@@ -16,6 +16,7 @@ import threading
 from typing import Mapping, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
@@ -130,6 +131,42 @@ DEFAULT_RULES: Mapping[str, MeshAxes] = {
     # (small) non-expert weights while the expert bank stays sharded.
     "expert_fsdp": ("pod", "data"),
 }
+
+
+def partition_devices(devices: Sequence, n_groups: int) -> Tuple[Tuple, ...]:
+    """Split a flat device list into ``n_groups`` contiguous equal groups.
+
+    The cluster placement layer treats each group as one logical *host*:
+    contiguous slices keep physically-adjacent devices (which JAX orders
+    by process/slice) on the same host, so intra-host collectives never
+    cross a host boundary.  Requires ``len(devices)`` divisible by
+    ``n_groups`` — a ragged split would give hosts different mesh shapes
+    and break bucket reuse across placements."""
+    if n_groups < 1:
+        raise ValueError("n_groups must be >= 1")
+    if len(devices) % n_groups != 0:
+        raise ValueError(
+            f"{len(devices)} devices do not split evenly into {n_groups} hosts"
+        )
+    per = len(devices) // n_groups
+    return tuple(tuple(devices[i * per:(i + 1) * per]) for i in range(n_groups))
+
+
+def host_mesh(devices: Sequence, axes: Tuple[str, str] = ("data", "model"),
+              model_parallel: Optional[int] = None) -> Mesh:
+    """A per-host mesh over one host's devices.
+
+    ``model_parallel`` fixes the size of the second (tensor-parallel)
+    axis; by default every device on the host goes to ``model`` — the
+    serving layer batches over hosts, not within one."""
+    n = len(devices)
+    if n == 0:
+        raise ValueError("cannot build a mesh over zero devices")
+    mp = n if model_parallel is None else model_parallel
+    if mp < 1 or n % mp != 0:
+        raise ValueError(f"model_parallel={mp} does not divide {n} devices")
+    arr = np.asarray(devices, dtype=object).reshape(n // mp, mp)
+    return Mesh(arr, axes)
 
 
 def default_axis_rules(mesh: Mesh, overrides: Optional[Mapping[str, MeshAxes]] = None) -> AxisRules:
