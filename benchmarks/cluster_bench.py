@@ -13,6 +13,18 @@ Writes ``BENCH_serve_cluster.json``:
   scenario (the hedged batch pays the failed attempt plus the
   knapsack re-solve on the survivors), with the unhedged median for
   scale;
+* ``fanout_speedup`` — mean batch member-*generation* service time
+  (the engine's ``timing["generate_s"]`` phase — the phase fan-out
+  parallelizes; fusion is a single-host stage identical either way)
+  with sequential routing over fan-out routing (per-host shards on
+  concurrent ``HostExecutor`` threads), under a fixed per-call
+  simulated device service floor (a real accelerator dispatch releases
+  the GIL exactly the way the floor's sleep does); acceptance is
+  >= 1.5x on the 8-forced-device fleet with ``fanout_recompiles == 0``;
+* ``recovery_ticks`` — logical ticks from the host-outage hedge to the
+  host's post-probation revival in the ``host-recovery`` preset, plus
+  the share of dispatches that ran with members masked (the window the
+  fleet served degraded);
 * ``steady_state_recompiles`` — generate compiles after warm; 0 means
   placement routing reuses every BucketLadder bucket.
 
@@ -42,6 +54,7 @@ from repro.serve import (
     Scheduler,
     TrafficSimulator,
     preset_scenarios,
+    requests_from_records,
 )
 from repro.serve.traffic import build_arrivals
 
@@ -49,7 +62,41 @@ from repro.serve.traffic import build_arrivals
 _STACK = None
 
 
-def _build_server(budget: float, n_hosts: int) -> EnsembleServer:
+class _ServiceFloor:
+    """MemberBackend wrapper adding a fixed per-call device service time.
+
+    The behavioural simulator generates in microseconds, so shard
+    concurrency has nothing to overlap; a real accelerator generate
+    blocks for milliseconds *outside the GIL* — ``sleep`` reproduces
+    exactly that profile, making the fan-out/sequential comparison
+    measure orchestration, not simulator arithmetic."""
+
+    def __init__(self, inner, service_s: float):
+        self.inner = inner
+        self.service_s = service_s
+
+    def num_members(self) -> int:
+        return self.inner.num_members()
+
+    def generate(self, member_idx, records, max_new_tokens):
+        time.sleep(self.service_s)
+        return self.inner.generate(member_idx, records, max_new_tokens)
+
+    # forward the optional hooks so warm-up and the recompile gate see
+    # through the floor to the real backend
+    def warm(self, shapes):
+        warm = getattr(self.inner, "warm", None)
+        if callable(warm):
+            warm(shapes)
+
+    def compiles(self) -> int:
+        compiles = getattr(self.inner, "compiles", None)
+        return compiles() if callable(compiles) else 0
+
+
+def _build_server(budget: float, n_hosts: int, policy: str = "modi",
+                  fanout: bool = False,
+                  service_floor_s: float = 0.0) -> EnsembleServer:
     global _STACK
     if _STACK is None:
         pred = build_predictor(num_models=len(DEFAULT_POOL))
@@ -58,13 +105,17 @@ def _build_server(budget: float, n_hosts: int) -> EnsembleServer:
         fp = fuser.init(jax.random.key(1))
         _STACK = (pred, pp, fuser, fp)
     pred, pp, fuser, fp = _STACK
-    server = EnsembleServer(DEFAULT_POOL, make_policy("modi", budget=budget),
+    kwargs = {"budget": budget} if policy == "modi" else {}
+    server = EnsembleServer(DEFAULT_POOL, make_policy(policy, **kwargs),
                             pred, pp, fuser, fp)
     devices = jax.devices()
     placeable = (len(devices) >= n_hosts and len(devices) % n_hosts == 0)
     plan = PlacementPlan.auto(DEFAULT_POOL, n_hosts=n_hosts,
                               devices=devices if placeable else None)
-    server.backend = ClusterRouter(server.backend, plan=plan)
+    backend = server.backend
+    if service_floor_s > 0:
+        backend = _ServiceFloor(backend, service_floor_s)
+    server.backend = ClusterRouter(backend, plan=plan, fanout=fanout)
     return server
 
 
@@ -142,6 +193,46 @@ def run(n_requests: int = 16, batch_size: int = 4, budget: float = 0.2,
     plain_walls = [w for i, w in enumerate(rep_f.wall_latency_s)
                    if w is not None and i not in hedged]
 
+    # -- fan-out vs sequential batch generation service -------------------
+    # llm-blender selects every pool member, so every placement host
+    # carries a shard — the comparison measures full cross-host overlap
+    # on the member-generation phase (the phase fan-out parallelizes;
+    # fusion is a separate single-host stage and identical either way),
+    # timed via the engine's own per-phase clock (timing["generate_s"])
+    floor_s = 0.02
+    service: dict = {}
+    fanout_recompiles = 0
+    for mode in ("sequential", "fanout"):
+        server_x = _build_server(budget, n_hosts, policy="llm-blender",
+                                 fanout=(mode == "fanout"),
+                                 service_floor_s=floor_s)
+        _warm(server_x, batch_size)
+        reqs = requests_from_records(records[:batch_size])
+        server_x.serve_requests(reqs)  # prime every bucket on this path
+        compiles_before = server_x.generate_compiles()["total"]
+        times = []
+        for _ in range(3):
+            out = server_x.serve_requests(reqs)
+            times.append(out[0].timing["generate_s"])
+        service[mode] = float(np.mean(times))
+        if mode == "fanout":
+            fanout_recompiles = (server_x.generate_compiles()["total"]
+                                 - compiles_before)
+            server_x.backend.close()
+
+    # -- host recovery: outage -> probation -> revival --------------------
+    server_r = _build_server(budget, n_hosts)
+    _warm(server_r, batch_size)
+    rep_r = TrafficSimulator(
+        Scheduler(server_r, max_batch_size=batch_size, max_wait_ticks=2),
+        scenarios["host-recovery"], records).run()
+    outage_ticks = [e["tick"] for e in rep_r.trace if e["event"] == "host_hedge"]
+    revive_ticks = [e["tick"] for e in rep_r.trace if e["event"] == "revive"]
+    dispatches = [e for e in rep_r.trace if e["event"] == "dispatch"]
+    masked_dispatches = sum(1 for e in dispatches if e["masked"])
+    recovery_ticks = (revive_ticks[0] - outage_ticks[0]
+                      if outage_ticks and revive_ticks else -1)
+
     p = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0  # noqa: E731
     batch_service_mean = float(np.mean(batch_service)) if batch_service else 0.0
     result = {
@@ -162,6 +253,18 @@ def run(n_requests: int = 16, batch_size: int = 4, budget: float = 0.2,
         "host_hedges": rep_f.stats["host_hedges"],
         "recovery_max_s": max(hedged_walls, default=0.0),
         "unhedged_median_s": p(plain_walls, 50),
+        "sequential_generate_s": service["sequential"],
+        "fanout_generate_s": service["fanout"],
+        "fanout_speedup": (service["sequential"] / service["fanout"]
+                           if service["fanout"] > 0 else 0.0),
+        "fanout_service_floor_s": floor_s,
+        "fanout_recompiles": fanout_recompiles,
+        "recovery_outage_tick": outage_ticks[0] if outage_ticks else -1,
+        "recovery_revive_tick": revive_ticks[0] if revive_ticks else -1,
+        "recovery_ticks": recovery_ticks,
+        "recovery_masked_dispatch_share": (
+            masked_dispatches / len(dispatches) if dispatches else 0.0),
+        "recovery_served": rep_r.served,
         "compiles_after_warm": warm_compiles,
         "compiles_final": async_compiles,
         "steady_state_recompiles": async_compiles - warm_compiles,
@@ -172,6 +275,8 @@ def run(n_requests: int = 16, batch_size: int = 4, budget: float = 0.2,
     log(f"wrote {out_path}: submit_p99={result['submit_p99_s']*1e6:.0f}us "
         f"(sync {result['submit_p99_sync_s']*1e6:.0f}us) "
         f"batch_service={batch_service_mean*1e3:.1f}ms "
+        f"fanout_speedup={result['fanout_speedup']:.2f}x "
+        f"recovery_ticks={result['recovery_ticks']} "
         f"recovery_max={result['recovery_max_s']*1e3:.1f}ms "
         f"recompiles={result['steady_state_recompiles']}")
     return [
@@ -179,8 +284,13 @@ def run(n_requests: int = 16, batch_size: int = 4, budget: float = 0.2,
          f"sync={result['submit_p99_sync_s']*1e6:.0f}us "
          f"batch={batch_service_mean*1e6:.0f}us "
          f"under_one_batch={result['submit_p99_under_one_batch']}"),
+        ("serve_cluster_fanout", result["fanout_generate_s"] * 1e6,
+         f"sequential={result['sequential_generate_s']*1e6:.0f}us "
+         f"speedup={result['fanout_speedup']:.2f}x "
+         f"recompiles={result['fanout_recompiles']}"),
         ("serve_cluster_recovery", result["recovery_max_s"] * 1e6,
          f"host_hedges={result['host_hedges']} "
+         f"recovery_ticks={result['recovery_ticks']} "
          f"unhedged_p50={result['unhedged_median_s']*1e6:.0f}us "
          f"recompiles={result['steady_state_recompiles']}"),
     ]

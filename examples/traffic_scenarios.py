@@ -8,9 +8,10 @@ Per scenario: p50/p99 request latency, deadline-miss rate, shed rate,
 hedged retries, and steady-state recompiles.  The ``failure`` scenario
 injects a mid-batch backend fault (hedged retry re-serves the batch on
 the surviving members); ``host-outage`` kills a whole placement host
-(the knapsack re-solves over the surviving members); ``diurnal`` drives
-a sinusoidal day/night load curve.  Every request resolves in all of
-them.
+(the knapsack re-solves over the surviving members); ``host-recovery``
+revives the dead host after a probation window mid-run; ``diurnal``
+drives a sinusoidal day/night load curve.  Every request resolves in
+all of them.
 """
 
 import argparse

@@ -143,6 +143,19 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="replica hosts per member (auto placement only; "
                          "replicated members survive a host failure)")
+    ap.add_argument("--fanout", action="store_true",
+                    help="serve a batch's per-host member shards "
+                         "concurrently on per-host executors (outputs are "
+                         "byte-identical to sequential routing)")
+    ap.add_argument("--probation-ticks", type=int, default=0,
+                    help="ticks a recovered host waits past its recovery "
+                         "tick before being re-admitted to routing")
+    ap.add_argument("--recover", type=str, default=None, metavar="HOST:TICK",
+                    help="schedule a dead host's recovery (comma-separated "
+                         "host:tick pairs; re-admitted after probation)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="re-place members that lost replica redundancy "
+                         "onto surviving hosts at the next maintenance tick")
     ap.add_argument("--async", dest="async_dispatch", action="store_true",
                     help="serve batches on a dispatch worker thread so "
                          "submit never blocks on a batch (--online only)")
@@ -165,8 +178,17 @@ def main():
         else:
             plan = PlacementPlan.auto(DEFAULT_POOL, args.hosts,
                                       replicas=args.replicas, devices=devices)
-        server.backend = ClusterRouter(server.backend, plan=plan)
-        print(f"cluster placement ({args.placement}, {args.hosts} hosts):")
+        recovery = {}
+        if args.recover:
+            for pair in args.recover.split(","):
+                host, _, tick = pair.partition(":")
+                recovery.setdefault(int(host), []).append(int(tick))
+        server.backend = ClusterRouter(
+            server.backend, plan=plan, fanout=args.fanout,
+            host_recovery={h: tuple(sorted(t)) for h, t in recovery.items()},
+            probation_ticks=args.probation_ticks, rebalance=args.rebalance)
+        print(f"cluster placement ({args.placement}, {args.hosts} hosts"
+              + (", fanout" if args.fanout else "") + "):")
         print(plan.describe())
     if args.online:
         # pre-compile every bucket a scheduler batch can map to: early

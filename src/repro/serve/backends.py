@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Protocol, Sequence, Union, runtime_checkable
+from typing import Dict, List, Protocol, Sequence, Tuple, Union, runtime_checkable
 
 import numpy as np
 
@@ -82,6 +82,23 @@ class HostFailure(RuntimeError):
         self.host_id = host_id
         self.member_idxs = tuple(member_idxs)
         self.cause = cause
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationCall:
+    """One member's generation work within a batch: the rows that
+    selected it plus their per-row token caps.  The engine hands the full
+    batch's calls (member order) to a backend's optional
+    ``generate_many(calls)`` hook — the seam fan-out routing
+    (:class:`repro.serve.cluster.ClusterRouter`) plugs into — and falls
+    back to one ``generate`` per call otherwise.  ``generate_many`` must
+    return results in call order and raise :class:`MemberFailure` /
+    :class:`HostFailure` with the same attribution the sequential loop
+    would."""
+
+    member_idx: int
+    records: Tuple
+    max_new_tokens: Tuple[int, ...]
 
 
 def per_row_caps(max_new_tokens: MaxNewTokens, n_rows: int) -> List[int]:
@@ -188,6 +205,18 @@ class FailureInjector:
         dead = getattr(self.inner, "dead_members", None)
         return dead() if callable(dead) else []
 
+    # NOTE: generate_many is deliberately NOT forwarded — it would route
+    # the engine's batch straight to the inner backend's fan-out and
+    # bypass this injector's per-member schedules.  Maintenance hooks
+    # are pure placement state and forward safely.
+    def maintenance_pending(self, now: int) -> bool:
+        pending = getattr(self.inner, "maintenance_pending", None)
+        return pending(now) if callable(pending) else False
+
+    def maintain(self, now: int) -> List[dict]:
+        maintain = getattr(self.inner, "maintain", None)
+        return maintain(now) if callable(maintain) else []
+
 
 @dataclasses.dataclass
 class LiveMember:
@@ -230,8 +259,11 @@ class LiveLMBackend:
         return d
 
     def compiles(self) -> int:
-        """Total live XLA compiles across member dispatchers."""
-        return sum(d.compiles for d in self._dispatchers.values())
+        """Total live XLA compiles across member dispatchers.  Snapshot
+        the dict first: fan-out shards lazily create dispatchers on host
+        executor threads, and iterating a dict another thread is
+        inserting into raises."""
+        return sum(d.compiles for d in list(self._dispatchers.values()))
 
     def warm(self, shapes: Sequence) -> None:
         """Pre-compile the given (batch, max_new) buckets for every member."""

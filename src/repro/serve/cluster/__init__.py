@@ -1,18 +1,24 @@
-"""Sharded multi-host serving: placement, routing, async dispatch.
+"""Sharded multi-host serving: placement, routing, fan-out, recovery.
 
 The cluster subsystem marries ``repro.sharding`` with the serving stack:
 
 * :class:`PlacementPlan` — which hosts (device groups) each pool member
-  runs on, with replica counts and a greedy cost/VRAM-balanced
-  auto-placer (:meth:`PlacementPlan.auto`);
+  runs on, with replica counts, a greedy cost/VRAM-balanced auto-placer
+  (:meth:`PlacementPlan.auto`), and dynamic healing
+  (:meth:`PlacementPlan.revive_host` / :meth:`PlacementPlan.rebalance`);
 * :class:`ClusterRouter` — a placement-aware
   :class:`~repro.serve.backends.MemberBackend` wrapper that routes each
   scheduler batch's per-member sub-batches to their placement (reusing
   the inner backend's BucketLadder jit caches), fails replicated members
-  over on host death, and escalates unreplicated deaths as
-  :class:`~repro.serve.backends.HostFailure`;
+  over on host death, escalates unreplicated deaths as
+  :class:`~repro.serve.backends.HostFailure`, fans per-host shards out
+  to concurrent executors (``fanout=True``), and re-admits recovered
+  hosts after a probation window (``host_recovery``/``probation_ticks``);
 * :class:`DispatchWorker` — the bounded-inbox thread behind
-  ``Scheduler(sync=False)``, so ``submit`` never blocks on a batch.
+  ``Scheduler(sync=False)``, so ``submit`` never blocks on a batch;
+* :class:`HostExecutor` / :class:`HostExecutorPool` — one bounded-queue
+  worker thread per live host, the fabric fan-out shards run on
+  (executors retire with dead hosts and respawn lazily after revival).
 """
 
 from repro.serve.cluster.placement import (
@@ -21,13 +27,22 @@ from repro.serve.cluster.placement import (
     PlacementPlan,
 )
 from repro.serve.cluster.router import ClusterRouter
-from repro.serve.cluster.worker import DispatchWorker, InboxFull
+from repro.serve.cluster.worker import (
+    DispatchWorker,
+    HostExecutor,
+    HostExecutorPool,
+    InboxFull,
+    ShardFuture,
+)
 
 __all__ = [
     "ClusterRouter",
     "DispatchWorker",
+    "HostExecutor",
+    "HostExecutorPool",
     "HostSpec",
     "InboxFull",
     "MemberPlacement",
     "PlacementPlan",
+    "ShardFuture",
 ]

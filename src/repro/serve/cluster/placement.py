@@ -24,12 +24,22 @@ Two constructors cover the common cases:
 Host death is a plan-level state change: :meth:`mark_host_dead` flips
 the host and returns the members left with no surviving replica — the
 set the Scheduler masks out of the knapsack re-solve (see
-:class:`~repro.serve.backends.HostFailure`).
+:class:`~repro.serve.backends.HostFailure`).  Plans are also *dynamic*:
+:meth:`revive_host` re-admits one recovered host (the router gates it
+behind a probation window), and :meth:`rebalance` re-places members that
+lost replica redundancy onto the least-loaded surviving hosts, so a
+long-running scheduler heals instead of shrinking monotonically.  All
+state-changing and state-snapshotting methods serialize on one RLock:
+with fan-out executors generating on host threads and tick-driven
+maintenance mutating the plan from the scheduler thread, every reader
+gets a consistent point-in-time view (see
+``Scheduler._serve_batch``'s per-batch dead-member snapshot).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 from repro.sharding.api import (
@@ -102,7 +112,11 @@ class PlacementPlan:
                 raise ValueError(
                     f"member {p.member_idx} has duplicate replica hosts")
         self.dead_hosts: Set[int] = set()
+        # replica target rebalance() restores members toward (the widest
+        # replica set any member was built with)
+        self.target_replicas = max(len(p.hosts) for p in self.placements)
         self._mesh_cache: Dict[int, object] = {}
+        self._lock = threading.RLock()
 
     # -- constructors ---------------------------------------------------
     @classmethod
@@ -165,47 +179,107 @@ class PlacementPlan:
 
     def members_on_host(self, host_id: int) -> List[int]:
         """Members with a replica placed on ``host_id`` (dead or alive)."""
-        return [p.member_idx for p in self.placements if host_id in p.hosts]
+        with self._lock:
+            return [p.member_idx for p in self.placements if host_id in p.hosts]
 
     def primary_host(self, member_idx: int) -> Optional[int]:
         """The first *alive* replica host for a member, or None if every
         replica's host is dead (the member is unroutable)."""
-        for h in self.placements[member_idx].hosts:
-            if h not in self.dead_hosts:
-                return h
-        return None
+        with self._lock:
+            for h in self.placements[member_idx].hosts:
+                if h not in self.dead_hosts:
+                    return h
+            return None
 
     def dead_members(self) -> List[int]:
-        """Members with no surviving replica."""
-        return [p.member_idx for p in self.placements
-                if all(h in self.dead_hosts for h in p.hosts)]
+        """Members with no surviving replica (a consistent snapshot: the
+        plan cannot flip hosts mid-iteration)."""
+        with self._lock:
+            return [p.member_idx for p in self.placements
+                    if all(h in self.dead_hosts for h in p.hosts)]
 
     def alive_members(self) -> List[int]:
-        return [p.member_idx for p in self.placements
-                if any(h not in self.dead_hosts for h in p.hosts)]
+        with self._lock:
+            return [p.member_idx for p in self.placements
+                    if any(h not in self.dead_hosts for h in p.hosts)]
+
+    def alive_hosts(self) -> List[int]:
+        with self._lock:
+            return [h.host_id for h in self.hosts
+                    if h.host_id not in self.dead_hosts]
+
+    def under_replicated(self) -> List[int]:
+        """Members whose *alive* replica count is below the plan's target —
+        the set :meth:`rebalance` re-places after a host death."""
+        with self._lock:
+            return [p.member_idx for p in self.placements
+                    if 0 < sum(h not in self.dead_hosts for h in p.hosts)
+                    < self.target_replicas]
 
     def host_load(self) -> Dict[int, float]:
         """Σ placed member weight per host — what the greedy placer balances."""
-        load = {h.host_id: 0.0 for h in self.hosts}
-        for p in self.placements:
-            for h in p.hosts:
-                load[h] += p.weight
-        return load
+        with self._lock:
+            load = {h.host_id: 0.0 for h in self.hosts}
+            for p in self.placements:
+                for h in p.hosts:
+                    load[h] += p.weight
+            return load
 
     # -- state changes --------------------------------------------------
     def mark_host_dead(self, host_id: int) -> List[int]:
         """Flip one host dead; returns the members this *newly* leaves
         with no surviving replica (empty if every member placed there
         fails over to a replica on a surviving host)."""
-        if host_id not in {h.host_id for h in self.hosts}:
-            raise ValueError(f"unknown host {host_id}")
-        before = set(self.dead_members())
-        self.dead_hosts.add(host_id)
-        return sorted(set(self.dead_members()) - before)
+        with self._lock:
+            if host_id not in {h.host_id for h in self.hosts}:
+                raise ValueError(f"unknown host {host_id}")
+            before = set(self.dead_members())
+            self.dead_hosts.add(host_id)
+            return sorted(set(self.dead_members()) - before)
+
+    def revive_host(self, host_id: int) -> List[int]:
+        """Re-admit one recovered host; returns the members that were
+        unroutable and regained a replica (the set the Scheduler stops
+        pre-masking).  The caller (router maintenance) owns the probation
+        window — the plan itself flips immediately."""
+        with self._lock:
+            if host_id not in {h.host_id for h in self.hosts}:
+                raise ValueError(f"unknown host {host_id}")
+            before = set(self.dead_members())
+            self.dead_hosts.discard(host_id)
+            return sorted(before - set(self.dead_members()))
+
+    def rebalance(self) -> List[Tuple[int, int]]:
+        """Restore replica redundancy lost to host deaths.
+
+        Every under-replicated member (alive replicas < the plan's
+        original replica target, but > 0 — fully dead members have
+        nothing to copy a replica from) gains one new replica host: the
+        least-loaded *alive* host not already holding it, ties toward
+        the lower id — the same deterministic greedy rule as
+        :meth:`auto`.  Returns the (member, new_host) moves, in member
+        order.  A later revival of the original host can leave a member
+        with more replicas than the target; extra redundancy is kept,
+        never pruned."""
+        with self._lock:
+            load = self.host_load()
+            moves: List[Tuple[int, int]] = []
+            for j in self.under_replicated():
+                p = self.placements[j]
+                candidates = [h for h in self.alive_hosts() if h not in p.hosts]
+                if not candidates:
+                    continue  # every alive host already holds a replica
+                h = min(candidates, key=lambda h: (load[h], h))
+                self.placements[j] = dataclasses.replace(
+                    p, hosts=p.hosts + (h,))
+                load[h] += p.weight
+                moves.append((j, h))
+            return moves
 
     def revive(self) -> None:
         """Bring every host back (scenario replays start from a clean fleet)."""
-        self.dead_hosts.clear()
+        with self._lock:
+            self.dead_hosts.clear()
 
     # -- meshes ---------------------------------------------------------
     def host_mesh(self, host_id: int):
@@ -218,11 +292,14 @@ class PlacementPlan:
             mesh = self._mesh_cache[host_id] = host_mesh(spec.devices)
         return mesh
 
-    def member_rules(self, member_idx: int) -> Optional[AxisRules]:
-        """AxisRules for a member's generation on its primary host, with
-        the member's per-placement axis overrides applied; None when the
+    def member_rules(self, member_idx: int,
+                     host: Optional[int] = None) -> Optional[AxisRules]:
+        """AxisRules for a member's generation on its primary host (or an
+        explicitly pinned ``host`` — fan-out resolves routing at planning
+        time and must not re-read it at execution time), with the
+        member's per-placement axis overrides applied; None when the
         plan is logical-only or the member is unroutable."""
-        h = self.primary_host(member_idx)
+        h = self.primary_host(member_idx) if host is None else host
         if h is None:
             return None
         mesh = self.host_mesh(h)

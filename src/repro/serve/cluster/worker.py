@@ -1,4 +1,5 @@
-"""Thread-backed batch dispatch with a bounded inbox.
+"""Thread-backed batch dispatch with a bounded inbox, plus the per-host
+executor fabric fan-out routing runs on.
 
 :class:`DispatchWorker` decouples ``Scheduler.submit`` from batch
 service: the scheduler forms batches on the caller's thread (cheap,
@@ -14,13 +15,24 @@ the queue is at capacity (the Scheduler turns that into an
 admission-control shed with reason ``backpressure``), while
 :meth:`submit` blocks the producer — the no-admission fallback, where
 slowing the caller is the only brake left.
+
+:class:`HostExecutor` / :class:`HostExecutorPool` are the layer *below*
+the dispatch worker: one bounded-queue worker thread per live placement
+host, so a batch's per-host member shards generate concurrently
+(``ClusterRouter(fanout=True)``).  The pool is dynamic — a host's
+executor is retired when the host dies and lazily respawned after the
+host is revived — which is what turns the cluster layer from a routing
+table into a self-healing executor fabric.  Concurrency here never
+touches ordering semantics: the batch-level serve joins every shard
+before returning, so the DispatchWorker above still sees one batch at a
+time.
 """
 
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, List
+from typing import Callable, Dict, List, Optional
 
 
 class InboxFull(RuntimeError):
@@ -102,3 +114,131 @@ class DispatchWorker:
                     self.processed += 1
             finally:
                 self._inbox.task_done()
+
+
+class ShardFuture:
+    """Resolution handle for one host shard submitted to a HostExecutor."""
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._result = None
+        self._error: Optional[BaseException] = None
+
+    def set_result(self, result) -> None:
+        self._result = result
+        self._done.set()
+
+    def set_error(self, error: BaseException) -> None:
+        self._error = error
+        self._done.set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"shard not served within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+class HostExecutor:
+    """One worker thread serving a single placement host's shards, FIFO.
+
+    Shards from the same batch run concurrently *across* executors and
+    sequentially *within* one — which is exactly the determinism the
+    fan-out router needs: a host's dispatch order (and therefore its
+    injected-failure schedule) is identical to sequential routing."""
+
+    def __init__(self, host_id: int, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.host_id = host_id
+        self.capacity = capacity
+        self._inbox: "queue.Queue" = queue.Queue(maxsize=capacity)
+        self._closed = False
+        self.processed = 0
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True, name=f"host-{host_id}-executor")
+        self._thread.start()
+
+    def submit(self, fn: Callable[[], object]) -> ShardFuture:
+        """Enqueue one shard thunk; blocks while the bounded queue is full."""
+        if self._closed:
+            raise RuntimeError(f"host {self.host_id} executor is closed")
+        future = ShardFuture()
+        self._inbox.put((fn, future))
+        return future
+
+    def close(self) -> None:
+        """Drain queued shards, stop the thread, reject further submits."""
+        if self._closed:
+            return
+        self._closed = True
+        self._inbox.put(_STOP)
+        self._thread.join()
+
+    def _loop(self) -> None:
+        while True:
+            job = self._inbox.get()
+            try:
+                if job is _STOP:
+                    return
+                fn, future = job
+                try:
+                    future.set_result(fn())
+                except BaseException as exc:
+                    future.set_error(exc)
+                else:
+                    self.processed += 1
+            finally:
+                self._inbox.task_done()
+
+
+class HostExecutorPool:
+    """Dynamic pool of per-host executors: one live thread per live host.
+
+    Executors spawn lazily on first submit to a host and are *retired*
+    (drained and joined) when the router marks the host dead — a revived
+    host simply gets a fresh executor on its next shard, so revival costs
+    one thread spawn and no coordination."""
+
+    def __init__(self, capacity: int = 8):
+        self.capacity = capacity
+        self._executors: Dict[int, HostExecutor] = {}
+        self._lock = threading.Lock()
+        self.spawned = 0
+        self.retired = 0
+
+    def executor(self, host_id: int) -> HostExecutor:
+        with self._lock:
+            ex = self._executors.get(host_id)
+            if ex is None:
+                ex = self._executors[host_id] = HostExecutor(
+                    host_id, capacity=self.capacity)
+                self.spawned += 1
+            return ex
+
+    def submit(self, host_id: int, fn: Callable[[], object]) -> ShardFuture:
+        return self.executor(host_id).submit(fn)
+
+    def retire(self, host_id: int) -> None:
+        """Drain and stop a dead host's executor (no-op if never spawned)."""
+        with self._lock:
+            ex = self._executors.pop(host_id, None)
+            if ex is not None:
+                self.retired += 1
+        if ex is not None:
+            ex.close()
+
+    def live_hosts(self) -> List[int]:
+        with self._lock:
+            return sorted(self._executors)
+
+    def close(self) -> None:
+        with self._lock:
+            executors = list(self._executors.values())
+            self._executors.clear()
+        for ex in executors:
+            ex.close()

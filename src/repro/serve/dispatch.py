@@ -145,9 +145,11 @@ class _BucketedGenerate:
         size when jax exposes it (it also catches intra-bucket misses,
         e.g. weak-type churn); otherwise falls back to the dispatcher's
         own bucket-build counter rather than silently flattening to a
-        constant."""
+        constant.  The entry dict is snapshotted first — monitoring reads
+        race bucket creation on fan-out host executor threads, and
+        iterating a dict mid-insert raises."""
         sizes = [getattr(entry.fn, "_cache_size", None)
-                 for entry in self._entries.values()]
+                 for entry in list(self._entries.values())]
         if all(callable(s) for s in sizes):
             return sum(s() for s in sizes)
         return self._built

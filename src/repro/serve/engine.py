@@ -46,6 +46,7 @@ from repro.data.tokenizer import TOKENIZER
 from repro.models.encdec import EncDecLM
 from repro.serve.api import EnsembleRequest, EnsembleResponse, requests_from_records
 from repro.serve.backends import (
+    GenerationCall,
     HostFailure,
     LiveLMBackend,
     LiveMember,
@@ -241,27 +242,47 @@ class EnsembleServer:
         (see backends.MemberBackend): each returned text is already at
         most its row's cap, so no re-tokenization happens here.  Caps are
         per row, never per micro-batch, so texts cannot depend on which
-        other rows share the batch."""
+        other rows share the batch.
+
+        A backend exposing ``generate_many(calls)`` (optional protocol
+        hook — the cluster router's fan-out seam) receives the whole
+        batch's calls at once so per-host shards can generate
+        concurrently; it owns the same failure attribution this loop
+        applies, and its results are order- and byte-identical to the
+        sequential path."""
         b, n = mask.shape
         out: List[List[Optional[str]]] = [[None] * n for _ in range(b)]
+        calls: List[GenerationCall] = []
+        call_rows: List[np.ndarray] = []
         for j in range(n):
             rows = np.flatnonzero(mask[:, j])
             if rows.size == 0:
                 continue
-            try:
-                texts = self.backend.generate(
-                    j, [records[i] for i in rows], [max_new_per_row[i] for i in rows]
-                )
-            except (MemberFailure, HostFailure):
-                # already attributed (member-level, or a whole placement
-                # host via the cluster router) — let the Scheduler hedge
-                raise
-            except Exception as exc:
-                # attribute the fault to the member so the Scheduler can
-                # hedge onto the survivors instead of failing the batch
-                raise MemberFailure(j, exc) from exc
+            calls.append(GenerationCall(
+                j, tuple(records[i] for i in rows),
+                tuple(max_new_per_row[i] for i in rows)))
+            call_rows.append(rows)
+        many = getattr(self.backend, "generate_many", None)
+        if callable(many):
+            texts_per_call = many(calls)
+        else:
+            texts_per_call = []
+            for call in calls:
+                try:
+                    texts_per_call.append(self.backend.generate(
+                        call.member_idx, list(call.records),
+                        list(call.max_new_tokens)))
+                except (MemberFailure, HostFailure):
+                    # already attributed (member-level, or a whole placement
+                    # host via the cluster router) — let the Scheduler hedge
+                    raise
+                except Exception as exc:
+                    # attribute the fault to the member so the Scheduler can
+                    # hedge onto the survivors instead of failing the batch
+                    raise MemberFailure(call.member_idx, exc) from exc
+        for call, rows, texts in zip(calls, call_rows, texts_per_call):
             for i, text in zip(rows, texts):
-                out[i][j] = text
+                out[i][call.member_idx] = text
         return out
 
     def _apply_exclusions(self, mask: np.ndarray, costs: np.ndarray,

@@ -403,8 +403,12 @@ class Scheduler:
     def tick(self) -> int:
         """Advance the logical clock; dispatch every request that has aged
         past ``max_wait_ticks`` or whose deadline tick is due.  Returns the
-        number of requests dispatched this tick."""
+        number of requests dispatched this tick.  Cluster maintenance
+        (host revival after probation, replica rebalance) runs first, so
+        batches formed this tick already route through the healed
+        placement."""
         self.now += 1
+        self._maintain_cluster()
         for p in self._queue:
             p.age_ticks += 1
         served = 0
@@ -417,6 +421,29 @@ class Scheduler:
             forced = sum(self._urgent(p) for p in group[:self.max_batch_size])
             served += self._dispatch_group(group, forced=max(forced, 1))
         return served
+
+    def _maintain_cluster(self) -> None:
+        """Apply due placement maintenance (cluster backends only): host
+        revival once a recovery's probation window has elapsed, and
+        replica re-placement for members that lost redundancy.  In-flight
+        shards are drained first (``join``) so migration never races
+        generation.  The pending-check reads only static schedule state —
+        deciding from live host health would let an in-flight async batch
+        (whose fault is about to flip a host dead) make this tick's
+        decision differ from sync mode's — so the drain happens exactly
+        on ticks where maintenance *might* apply, and the precise
+        decision runs on drained state: maintenance events land in the
+        flat trace at identical ticks in both dispatch modes.  Fleets
+        with no recovery schedule and no rebalance never pay the
+        barrier."""
+        backend = self.server.backend
+        pending = getattr(backend, "maintenance_pending", None)
+        if not callable(pending) or not pending(self.now):
+            return
+        self.join()  # drain in-flight shards before migrating placement
+        for ev in backend.maintain(self.now):
+            ev = dict(ev)
+            self._event(ev.pop("event"), **ev)
 
     def flush(self) -> int:
         """Dispatch everything queued, regardless of age, deadline, or rung."""
@@ -555,7 +582,13 @@ class Scheduler:
         # pre-mask members already known dead (a cluster backend's plan
         # records host deaths), so only the batch in flight at the fault
         # pays a retry — later batches route around the dead host from
-        # the start
+        # the start.  The state is SNAPSHOT exactly once per batch, at
+        # dispatch time (service entry — inline at dispatch in sync mode;
+        # on the FIFO worker in async mode, where every earlier batch has
+        # already served, so both modes see the identical view), and the
+        # snapshot is an atomic read under the plan's lock: tick-driven
+        # revival/rebalance mutating the plan from the caller thread can
+        # never tear this batch's masking decisions mid-service.
         dead_hook = getattr(self.server.backend, "dead_members", None)
         masked: frozenset = (frozenset(dead_hook()) if callable(dead_hook)
                              else frozenset())

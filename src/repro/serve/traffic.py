@@ -126,7 +126,15 @@ class Scenario:
     :class:`~repro.serve.cluster.ClusterRouter`); ``host_failures`` maps
     a host id to the 0-based *dispatch* indices at which that whole host
     dies mid-scenario — the correlated-failure counterpart of
-    ``failures``."""
+    ``failures``.  ``host_recoveries`` maps a host id to the logical
+    ticks at which it comes back up (re-admitted after
+    ``probation_ticks`` more ticks of probation); ``replicas`` places
+    each member on that many distinct hosts, ``rebalance`` re-places
+    members that lost replica redundancy at the next maintenance tick,
+    and ``fanout`` serves a batch's per-host shards concurrently on the
+    router's executor pool — all without changing a single output byte
+    (fan-out and recovery are routing concerns; the chaos suite pins
+    byte-equivalence against sequential routing per preset)."""
 
     name: str
     arrivals: ArrivalProcess = ArrivalProcess()
@@ -137,6 +145,11 @@ class Scenario:
     failures: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
     hosts: Optional[int] = None
     host_failures: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
+    host_recoveries: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
+    probation_ticks: int = 0
+    replicas: int = 1
+    rebalance: bool = False
+    fanout: bool = False
 
 
 def build_arrivals(scenario: Scenario,
@@ -254,25 +267,35 @@ class TrafficSimulator:
         self.scheduler = scheduler
         self.scenario = scenario
         self.records = list(records)
-        if scenario.failures or scenario.host_failures or scenario.hosts:
+        cluster_wired = (scenario.host_failures or scenario.hosts
+                         or scenario.host_recoveries or scenario.fanout)
+        if scenario.failures or cluster_wired:
             # always wrap fresh around the innermost backend: a reused
             # server keeps neither a previous scenario's schedules nor its
             # consumed call/dispatch counters nor its dead hosts, so
             # replay() stays byte-identical
             backend = scheduler.server.backend
             while isinstance(backend, (FailureInjector, ClusterRouter)):
+                if isinstance(backend, ClusterRouter):
+                    backend.close()  # stop a stale router's executor threads
                 backend = backend.inner
             if scenario.failures:
                 backend = FailureInjector(
                     backend, failures={m: tuple(calls)
                                        for m, calls in scenario.failures})
-            if scenario.host_failures or scenario.hosts:
+            if cluster_wired:
                 plan = PlacementPlan.auto(scheduler.server.pool,
-                                          n_hosts=scenario.hosts or DEFAULT_HOSTS)
+                                          n_hosts=scenario.hosts or DEFAULT_HOSTS,
+                                          replicas=scenario.replicas)
                 backend = ClusterRouter(
                     backend, plan=plan,
                     host_failures={h: tuple(calls)
-                                   for h, calls in scenario.host_failures})
+                                   for h, calls in scenario.host_failures},
+                    host_recovery={h: tuple(ticks)
+                                   for h, ticks in scenario.host_recoveries},
+                    probation_ticks=scenario.probation_ticks,
+                    rebalance=scenario.rebalance,
+                    fanout=scenario.fanout)
             scheduler.server.backend = backend
 
     def run(self, max_idle_ticks: int = 1000) -> TrafficReport:
@@ -406,7 +429,10 @@ def preset_scenarios(n_requests: int = 24, seed: int = 0) -> Dict[str, Scenario]
     two members modi@0.2 reliably selects under the default stack seeds),
     so hedged retry actually fires; ``host-outage`` kills a whole
     placement host mid-run, so the host-level hedge (knapsack re-solve
-    over the survivors) fires; every future still resolves."""
+    over the survivors) fires; ``host-recovery`` additionally declares
+    the dead host healthy at tick 4 and re-admits it after a 1-tick
+    probation window, so late batches select the revived host's members
+    again (outage → probation → revival); every future still resolves."""
     return {
         "steady": Scenario(
             name="steady",
@@ -455,5 +481,12 @@ def preset_scenarios(n_requests: int = 24, seed: int = 0) -> Dict[str, Scenario]
             arrivals=ArrivalProcess("steady", rate=2.0),
             n_requests=n_requests, seed=seed, deadline_ticks=4,
             hosts=4, host_failures=((0, (1,)),),
+        ),
+        "host-recovery": Scenario(
+            name="host-recovery",
+            arrivals=ArrivalProcess("steady", rate=2.0),
+            n_requests=n_requests, seed=seed, deadline_ticks=4,
+            hosts=4, host_failures=((0, (1,)),),
+            host_recoveries=((0, (4,)),), probation_ticks=1,
         ),
     }

@@ -1,0 +1,537 @@
+"""Chaos-scenario tier: concurrent fan-out, host recovery, rebalance.
+
+Runs as its own CI job (``pytest -m chaos``) under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — and, like every
+cluster test, passes identically on one device (logical-only placement).
+
+What this tier pins, beyond the happy paths of the scenario/cluster
+suites:
+
+* **fan-out byte-equivalence** — ``ClusterRouter(fanout=True)`` (per-host
+  shards on concurrent ``HostExecutor`` threads) produces traces, stats,
+  and responses byte-identical to sequential routing on EVERY preset
+  scenario: fan-out may change wall-clock, never outputs;
+* **rolling host outages** — two hosts dying at different points in one
+  run: the knapsack re-solve masks exactly the newly dead members each
+  time (golden trace), and every future still resolves;
+* **revival mid-burst** — outage → probation → revival inside a bursty
+  arrival stream: the revive event lands at its deterministic tick and
+  post-revival batches stop pre-masking the recovered members;
+* **replica-loss-then-rebalance** — a host death absorbed by replica
+  failover leaves members under-replicated; tick-driven maintenance
+  re-places them so ANY single further host death strands nobody;
+* **random chaos property** — for random placements, failure schedules,
+  and probation windows, fan-out + recovery serves exactly the requests
+  the sequential reference serves, and no dispatch ever routes to a host
+  that was dead at dispatch time (router audit log);
+* **hardening regressions under fan-out** — the PR 4 closed-worker
+  future resolution and total-outage "no servable pool members" paths
+  survive ``fanout=True``;
+* **pre-mask snapshot stability** — the per-batch dead-member snapshot
+  (taken at dispatch time on the serving thread) keeps async traces
+  byte-identical to sync even when a death lands while later batches
+  are already queued.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs
+from repro.core import build_predictor, make_policy
+from repro.data import DEFAULT_POOL, generate_dataset
+from repro.models import build_model
+from repro.serve import (
+    ArrivalProcess,
+    ClusterRouter,
+    EnsembleRequest,
+    EnsembleServer,
+    HostFailure,
+    PlacementPlan,
+    Scenario,
+    Scheduler,
+    TrafficSimulator,
+    preset_scenarios,
+)
+
+pytestmark = [pytest.mark.chaos]
+
+N_POOL = len(DEFAULT_POOL)
+RECORDS = generate_dataset(24, seed=3)
+
+
+@pytest.fixture(scope="module")
+def stack():
+    pred = build_predictor(num_models=N_POOL)
+    pp = pred.init(jax.random.key(0))
+    fuser = build_model(configs.get("gen-fuser"))
+    fp = fuser.init(jax.random.key(1))
+    return pred, pp, fuser, fp
+
+
+def _server(stack, policy="modi", **kwargs):
+    pred, pp, fuser, fp = stack
+    return EnsembleServer(DEFAULT_POOL, make_policy(policy, **kwargs),
+                          pred, pp, fuser, fp)
+
+
+def _sched(stack, sync=True, policy="modi", **kwargs):
+    kwargs.setdefault("max_batch_size", 4)
+    kwargs.setdefault("max_wait_ticks", 2)
+    policy_kwargs = {"budget": 0.2} if policy == "modi" else {}
+    return Scheduler(_server(stack, policy=policy, **policy_kwargs),
+                     sync=sync, **kwargs)
+
+
+def _run(sched, scenario, records=RECORDS):
+    try:
+        return TrafficSimulator(sched, scenario, records).run()
+    finally:
+        backend = sched.server.backend
+        if isinstance(backend, ClusterRouter):
+            backend.close()
+        sched.close()
+
+
+def _texts(report):
+    return [r.text if r is not None else None for r in report.responses]
+
+
+# ---------------------------------------------------------------------------
+# Fan-out byte-equivalence on every preset scenario
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(preset_scenarios()))
+def test_fanout_matches_sequential_on_every_preset(stack, name):
+    """fanout=True must be invisible in the trace: same events, same
+    stats, same bytes — on every preset, including those that only grow
+    a cluster router for this comparison."""
+    base = preset_scenarios(n_requests=12)[name]
+    seq = dataclasses.replace(base, hosts=base.hosts or 4, fanout=False)
+    fan = dataclasses.replace(base, hosts=base.hosts or 4, fanout=True)
+    seq_rep = _run(_sched(stack), seq)
+    fan_rep = _run(_sched(stack), fan)
+    assert fan_rep.trace == seq_rep.trace
+    assert fan_rep.stats == seq_rep.stats
+    assert _texts(fan_rep) == _texts(seq_rep)
+    assert fan_rep.latency_ticks == seq_rep.latency_ticks
+
+
+def test_fanout_actually_fans_out(stack):
+    """Sanity for the comparison above: the fan-out run really did run
+    per-host shards through the executor pool (not the sequential path)."""
+    scenario = dataclasses.replace(
+        preset_scenarios(n_requests=12)["steady"], hosts=4, fanout=True)
+    sched = _sched(stack)
+    report = _run(sched, scenario)
+    router = sched.server.backend
+    assert isinstance(router, ClusterRouter)
+    assert router.stats["fanout_batches"] > 0
+    assert router.stats["shards"] >= router.stats["fanout_batches"]
+    assert report.served == report.n
+
+
+# ---------------------------------------------------------------------------
+# Rolling host outages (golden trace)
+# ---------------------------------------------------------------------------
+
+ROLLING = Scenario(
+    name="rolling-outage",
+    arrivals=ArrivalProcess("steady", rate=2.0),
+    n_requests=16, seed=0, deadline_ticks=4, hosts=4,
+    host_failures=((0, (1,)), (2, (3,))),
+)
+
+
+def test_rolling_outages_golden_trace(stack):
+    """Two hosts die at different points; each hedge masks exactly the
+    newly dead members, the mask accumulates, every future resolves.
+    The golden events are hand-derived from the deterministic placement
+    (auto over 4 hosts: host 0 holds members [1, 7], host 2 holds
+    [3, 4]) and the injected dispatch schedule."""
+    report = _run(_sched(stack), ROLLING)
+    assert report.served == report.n == 16
+    assert report.stats["host_hedges"] == 2
+
+    structural = [e for e in report.trace
+                  if e["event"] in ("host_hedge", "dispatch")]
+    assert structural == [
+        {"tick": 1, "event": "dispatch", "reqs": [0, 1, 2, 3], "size": 4,
+         "bucket": 4, "exclude": [], "masked": []},
+        {"tick": 3, "event": "host_hedge", "host": 0, "members": [1, 7],
+         "reqs": [4, 5, 6, 7], "masked": [1, 7]},
+        {"tick": 3, "event": "dispatch", "reqs": [4, 5, 6, 7], "size": 4,
+         "bucket": 4, "exclude": [], "masked": [1, 7]},
+        {"tick": 5, "event": "host_hedge", "host": 2, "members": [3, 4],
+         "reqs": [8, 9, 10, 11], "masked": [1, 3, 4, 7]},
+        {"tick": 5, "event": "dispatch", "reqs": [8, 9, 10, 11], "size": 4,
+         "bucket": 4, "exclude": [], "masked": [1, 3, 4, 7]},
+        {"tick": 7, "event": "dispatch", "reqs": [12, 13, 14, 15], "size": 4,
+         "bucket": 4, "exclude": [], "masked": [1, 3, 4, 7]},
+    ]
+    # post-outage responses never select a dead member
+    for i in range(4, 16):
+        assert not report.responses[i].mask[[1, 7]].any()
+    for i in range(8, 16):
+        assert not report.responses[i].mask[[1, 3, 4, 7]].any()
+
+
+def test_rolling_outages_fanout_equivalent_and_replayable(stack):
+    fan = dataclasses.replace(ROLLING, fanout=True)
+    a = _run(_sched(stack), fan)
+    b = _run(_sched(stack), fan)
+    seq = _run(_sched(stack), ROLLING)
+    assert a.trace == b.trace == seq.trace
+    assert _texts(a) == _texts(b) == _texts(seq)
+
+
+# ---------------------------------------------------------------------------
+# Revival mid-burst (golden trace)
+# ---------------------------------------------------------------------------
+
+BURST_REVIVE = Scenario(
+    name="burst-revive",
+    arrivals=ArrivalProcess("bursty", burst_size=6, burst_every=4),
+    n_requests=18, seed=0, deadline_ticks=6, hosts=4,
+    host_failures=((0, (1,)),),
+    host_recoveries=((0, (5,)),), probation_ticks=2,
+)
+
+
+def test_revival_mid_burst_golden_trace(stack):
+    """Outage at tick 2 (members [1, 7] stranded), recovery declared at
+    tick 5, probation 2 → revive at tick 7, mid-stream: batches before
+    the revival pre-mask [1, 7], batches after select them again."""
+    report = _run(_sched(stack), BURST_REVIVE)
+    assert report.served == report.n == 18
+
+    revives = [e for e in report.trace if e["event"] == "revive"]
+    assert revives == [{"tick": 7, "event": "revive", "host": 0,
+                        "recovered": [1, 7], "probation": 2}]
+    masked_by_tick = [(e["tick"], e["masked"]) for e in report.trace
+                      if e["event"] == "dispatch"]
+    assert masked_by_tick == [
+        (0, []), (2, [1, 7]), (4, [1, 7]), (6, [1, 7]), (8, []), (10, []),
+    ]
+    # the revived members are selectable again: post-revival responses
+    # equal the plain offline path (no masking at all)
+    post = [i for i in range(12, 18)]
+    offline = _server(stack, budget=0.2).serve_requests(
+        [report.requests[i] for i in post])
+    assert [report.responses[i].text for i in post] == [r.text for r in offline]
+
+
+def test_revival_mid_burst_fanout_and_async_equivalent(stack):
+    sync_rep = _run(_sched(stack), BURST_REVIVE)
+    async_rep = _run(_sched(stack, sync=False), BURST_REVIVE)
+    fan_rep = _run(_sched(stack), dataclasses.replace(BURST_REVIVE, fanout=True))
+    assert async_rep.trace == sync_rep.trace
+    assert fan_rep.trace == sync_rep.trace
+    assert _texts(async_rep) == _texts(sync_rep) == _texts(fan_rep)
+
+
+# ---------------------------------------------------------------------------
+# Replica loss, then rebalance
+# ---------------------------------------------------------------------------
+
+
+def test_replica_loss_then_rebalance_restores_redundancy(stack):
+    """replicas=2: host 0's death is absorbed by failover (no hedge, no
+    masked knapsack), but its members are left one-replica; maintenance
+    re-places them on surviving hosts so ANY further single host death
+    strands nobody.  llm-blender selects every member, so the failing
+    host is guaranteed traffic."""
+    scenario = Scenario(
+        name="replica-loss",
+        arrivals=ArrivalProcess("steady", rate=2.0),
+        n_requests=12, seed=0, hosts=4, replicas=2, rebalance=True,
+        host_failures=((0, (0,)),),
+        mix=((1.0, {"policy": "llm-blender"}),),
+    )
+    sched = _sched(stack, policy="llm-blender")
+    report = _run(sched, scenario)
+    router = sched.server.backend
+    assert isinstance(router, ClusterRouter)
+
+    assert report.served == report.n  # the death was invisible to callers
+    assert report.stats["host_hedges"] == 0
+    assert router.stats["failovers"] >= 1
+
+    moves = [e for e in report.trace if e["event"] == "rebalance"]
+    assert moves == [
+        {"tick": 2, "event": "rebalance", "member": 1, "host": 2},
+        {"tick": 2, "event": "rebalance", "member": 5, "host": 3},
+        {"tick": 2, "event": "rebalance", "member": 6, "host": 3},
+        {"tick": 2, "event": "rebalance", "member": 7, "host": 2},
+    ]
+    assert router.plan.under_replicated() == []
+    # redundancy is genuinely restored: any further single host death
+    # leaves every member with a surviving replica
+    for h in router.plan.alive_hosts():
+        dead = router.plan.dead_hosts | {h}
+        stranded = [p.member_idx for p in router.plan.placements
+                    if all(x in dead for x in p.hosts)]
+        assert stranded == []
+
+
+def test_rebalance_survives_second_death(stack):
+    """After the rebalance above, killing one of the hosts that absorbed
+    the re-placed replicas still strands nobody — the batch fails over
+    again instead of hedging."""
+    scenario = Scenario(
+        name="replica-loss-2",
+        arrivals=ArrivalProcess("steady", rate=2.0),
+        n_requests=16, seed=0, hosts=4, replicas=2, rebalance=True,
+        host_failures=((0, (0,)), (2, (8,))),
+        mix=((1.0, {"policy": "llm-blender"}),),
+    )
+    sched = _sched(stack, policy="llm-blender")
+    report = _run(sched, scenario)
+    router = sched.server.backend
+    assert report.served == report.n
+    assert report.stats["host_hedges"] == 0  # both deaths absorbed
+    assert router.stats["host_faults"] == 2
+    assert router.plan.dead_members() == []
+    # baseline equivalence: failover + rebalance never changed a byte
+    offline = _server(stack, policy="llm-blender").serve_requests(
+        report.requests)
+    assert _texts(report) == [r.text for r in offline]
+
+
+# ---------------------------------------------------------------------------
+# Random chaos property: fan-out + recovery == sequential reference
+# ---------------------------------------------------------------------------
+
+_PROPERTY_STACK = None
+
+
+@pytest.fixture(autouse=True)
+def _property_stack(stack):
+    global _PROPERTY_STACK
+    _PROPERTY_STACK = stack
+    yield
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_hosts=st.sampled_from([2, 3, 4]),
+    replicas=st.sampled_from([1, 2]),
+    probation=st.integers(0, 3),
+)
+def test_random_chaos_fanout_equals_sequential(seed, n_hosts, replicas,
+                                               probation):
+    """Random failure schedules, recoveries, and probation windows: the
+    set of served requests (and every served byte) under fan-out +
+    recovery equals the sequential reference, and no generation call is
+    ever dispatched to a host that was dead at dispatch time."""
+    stack = _PROPERTY_STACK
+    rng = np.random.default_rng(seed)
+    replicas = min(replicas, n_hosts)
+    n_fail = int(rng.integers(1, 3))
+    hosts_failing = rng.choice(n_hosts, size=min(n_fail, n_hosts),
+                               replace=False)
+    host_failures = tuple(
+        (int(h), tuple(sorted(set(
+            int(i) for i in rng.integers(0, 6, size=rng.integers(1, 3))))))
+        for h in hosts_failing)
+    host_recoveries = tuple(
+        (int(h), (int(rng.integers(2, 9)),))
+        for h in hosts_failing if rng.random() < 0.5)
+    base = Scenario(
+        name=f"chaos-{seed}",
+        arrivals=ArrivalProcess("steady", rate=2.0),
+        n_requests=6, seed=seed, deadline_ticks=4,
+        hosts=n_hosts, replicas=replicas,
+        host_failures=host_failures,
+        host_recoveries=host_recoveries, probation_ticks=probation,
+    )
+    reports = {}
+    for fanout in (False, True):
+        sched = _sched(stack, max_batch_size=3)
+        sim = TrafficSimulator(
+            sched, dataclasses.replace(base, fanout=fanout), RECORDS)
+        router = sched.server.backend
+        assert isinstance(router, ClusterRouter)
+        router.record_audit = True
+        try:
+            reports[fanout] = sim.run()
+        finally:
+            router.close()
+        # no dispatch ever routed to a host that was dead at dispatch time
+        assert not any(was_dead for _, _, _, was_dead in router.audit)
+    seq, fan = reports[False], reports[True]
+    assert _texts(fan) == _texts(seq)
+    assert fan.trace == seq.trace
+    assert fan.stats == seq.stats
+    assert ([type(e).__name__ for e in fan.errors]
+            == [type(e).__name__ for e in seq.errors])
+
+
+class _RealFault:
+    """Backend wrapper raising a *real* (non-injected) HostFailure from
+    inside shard execution, once, for one member — the mid-flight fault
+    the planning pass cannot see."""
+
+    def __init__(self, inner, host, member):
+        self.inner, self.host, self.member = inner, host, member
+        self.fired = False
+
+    def num_members(self):
+        return self.inner.num_members()
+
+    def generate(self, j, records, caps):
+        if j == self.member and not self.fired:
+            self.fired = True
+            raise HostFailure(self.host,
+                              cause=RuntimeError("real device fault"))
+        return self.inner.generate(j, records, caps)
+
+
+def test_fanout_real_fault_heals_shard_tail(stack):
+    """A real HostFailure mid-shard (not an injected, planning-time one)
+    with replicas=2: the router absorbs the death, re-serves the faulted
+    call AND the aborted shard tail on the surviving replicas, retires
+    the dead host's executor, and the caller sees baseline bytes.
+    Regression: the tail used to be dropped (KeyError → whole-batch
+    failure) and the retired executor respawned."""
+    server = _server(stack, policy="llm-blender")
+    plan = PlacementPlan.auto(DEFAULT_POOL, n_hosts=4, replicas=2)
+    host = next(h.host_id for h in plan.hosts
+                if len([j for j in plan.members_on_host(h.host_id)
+                        if plan.primary_host(j) == h.host_id]) >= 2)
+    victim = min(j for j in plan.members_on_host(host)
+                 if plan.primary_host(j) == host)
+    router = ClusterRouter(_RealFault(server.backend, host, victim),
+                           plan=plan, fanout=True)
+    server.backend = router
+    try:
+        from repro.serve import requests_from_records
+        reqs = requests_from_records(RECORDS[:4])
+        out = server.serve_requests(reqs)
+        assert router.stats["host_faults"] == 1
+        assert router.stats["failovers"] == 1
+        assert router.plan.dead_hosts == {host}
+        assert host not in router._pool.live_hosts()
+        baseline = _server(stack, policy="llm-blender").serve_requests(reqs)
+        assert [r.text for r in out] == [r.text for r in baseline]
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# PR 4 hardening paths survive fan-out mode
+# ---------------------------------------------------------------------------
+
+
+def test_total_outage_fails_batch_but_resolves_futures_under_fanout(stack):
+    """Every host dead with fanout=True: the in-flight batch fails with
+    HostFailure (futures resolved, never hung) and batches formed after
+    the total outage fail with the clear no-servable-members error."""
+    server = _server(stack, budget=0.2)
+    plan = PlacementPlan.round_robin(N_POOL, 2)
+    router = ClusterRouter(server.backend, plan=plan, fanout=True,
+                           host_failures={0: (0, 1, 2, 3),
+                                          1: (0, 1, 2, 3)})
+    server.backend = router
+    sched = Scheduler(server, max_batch_size=2, max_wait_ticks=10)
+    try:
+        futs = []
+        with pytest.raises(HostFailure):
+            for r in RECORDS[:2]:
+                futs.append(sched.submit(
+                    EnsembleRequest(query=r.query, record=r)))
+        assert sched.last_submitted is not None and sched.last_submitted.done()
+        with pytest.raises(HostFailure):
+            sched.last_submitted.result()
+
+        with pytest.raises(RuntimeError, match="no servable pool members"):
+            for r in RECORDS[2:4]:
+                sched.submit(EnsembleRequest(query=r.query, record=r))
+        assert sched.last_submitted.done()
+        with pytest.raises(RuntimeError, match="no servable pool members"):
+            sched.last_submitted.result()
+    finally:
+        router.close()
+
+
+def test_async_result_after_close_resolves_under_fanout(stack):
+    """result() on a queued request after close() must resolve every
+    popped future with the closed-worker cause — with the fan-out router
+    installed, exactly like the plain backend regression."""
+    server = _server(stack, budget=0.2)
+    router = ClusterRouter(server.backend,
+                           plan=PlacementPlan.auto(DEFAULT_POOL, n_hosts=4),
+                           fanout=True)
+    server.backend = router
+    sched = Scheduler(server, max_batch_size=8, max_wait_ticks=10, sync=False)
+    try:
+        f1 = sched.submit(EnsembleRequest(query=RECORDS[0].query,
+                                          record=RECORDS[0]))
+        f2 = sched.submit(EnsembleRequest(query=RECORDS[1].query,
+                                          record=RECORDS[1]))
+        sched.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            f1.result(timeout=5.0)
+        assert f2.done()
+        with pytest.raises(RuntimeError, match="closed"):
+            f2.result(timeout=5.0)
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# Per-batch dead-member snapshot: async pre-mask cannot race a death
+# ---------------------------------------------------------------------------
+
+
+def test_premask_snapshot_keeps_async_trace_stable(stack):
+    """A host death lands while later batches are already queued on the
+    dispatch worker: because the dead-member state is snapshot per batch
+    at dispatch time on the serving thread (FIFO — every earlier batch
+    has served), the async trace is byte-identical to sync, run after
+    run.  This is the regression for the pre-mask race: a formation-time
+    read (or a torn mid-service read) would miss the death and pay a
+    spurious hedge."""
+    scenario = preset_scenarios(n_requests=16)["host-outage"]
+
+    def run(sync):
+        sched = _sched(stack, sync=sync)
+        return _run(sched, scenario)
+
+    sync_a, sync_b = run(True), run(True)
+    async_a, async_b = run(False), run(False)
+    assert sync_a.trace == sync_b.trace == async_a.trace == async_b.trace
+    assert sync_a.stats == async_a.stats
+    # the batches formed after the death pre-masked it (no second hedge)
+    assert sync_a.stats["host_hedges"] == 1
+    masked = [e["masked"] for e in sync_a.trace if e["event"] == "dispatch"]
+    assert masked[-1] != []  # later batches carried the snapshot pre-mask
+
+
+def test_dead_members_snapshot_is_atomic(stack):
+    """dead_members() is one consistent read under the plan lock: a
+    concurrent revive cannot tear it (members of a half-revived plan)."""
+    plan = PlacementPlan.round_robin(N_POOL, 4)
+    router = ClusterRouter(SimRouterBackend(), plan=plan)
+    plan.mark_host_dead(0)
+    plan.mark_host_dead(1)
+    dead = router.dead_members()
+    assert dead == sorted(plan.members_on_host(0) + plan.members_on_host(1))
+    plan.revive_host(0)
+    assert router.dead_members() == plan.members_on_host(1)
+
+
+class SimRouterBackend:
+    """Minimal MemberBackend for plan-level tests (never generates)."""
+
+    def num_members(self):
+        return N_POOL
+
+    def generate(self, member_idx, records, max_new_tokens):
+        raise AssertionError("plan-level test must not generate")
