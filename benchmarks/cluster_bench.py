@@ -25,6 +25,18 @@ Writes ``BENCH_serve_cluster.json``:
   host's post-probation revival in the ``host-recovery`` preset, plus
   the share of dispatches that ran with members masked (the window the
   fleet served degraded);
+* ``probe_recovery_ticks`` — the same outage-to-revival gap under the
+  ``probe-recovery`` preset, where a HealthMonitor's half-open probe
+  revives the host at the next probe tick instead of a schedule +
+  probation window (acceptance: strictly below ``recovery_ticks``);
+* ``straggler_p99_hedged_s`` vs ``straggler_p99_unhedged_s`` — p99
+  batch member-generation time with one grey-slow host, with and
+  without the fan-out shard deadline (a late shard is cancelled and
+  hedged onto a replica host); acceptance: hedging wins with
+  ``hedge_recompiles == 0``;
+* ``degraded_rate`` — share of responses served as partial ensembles
+  (knapsack over survivors, ``degraded=True``) through the host-outage
+  preset with ``Scheduler(allow_degraded=True)``;
 * ``steady_state_recompiles`` — generate compiles after warm; 0 means
   placement routing reuses every BucketLadder bucket.
 
@@ -53,6 +65,7 @@ from repro.serve import (
     PlacementPlan,
     Scheduler,
     TrafficSimulator,
+    current_dispatch_host,
     preset_scenarios,
     requests_from_records,
 )
@@ -94,9 +107,31 @@ class _ServiceFloor:
         return compiles() if callable(compiles) else 0
 
 
+class _StragglerFloor(_ServiceFloor):
+    """Host-aware service floor: one grey host serves every call
+    ``slow_s`` wall seconds while the rest serve ``service_s`` — the
+    wall-clock straggler the shard-deadline hedge races.  The executing
+    host is read from ``current_dispatch_host()`` (set by the router
+    around every inner generate), so the same wrapper instance is fast
+    or slow purely by where the shard landed."""
+
+    def __init__(self, inner, service_s: float, slow_host: int, slow_s: float):
+        super().__init__(inner, service_s)
+        self.slow_host = slow_host
+        self.slow_s = slow_s
+
+    def generate(self, member_idx, records, max_new_tokens):
+        slow = current_dispatch_host() == self.slow_host
+        time.sleep(self.slow_s if slow else self.service_s)
+        return self.inner.generate(member_idx, records, max_new_tokens)
+
+
 def _build_server(budget: float, n_hosts: int, policy: str = "modi",
                   fanout: bool = False,
-                  service_floor_s: float = 0.0) -> EnsembleServer:
+                  service_floor_s: float = 0.0,
+                  replicas: int = 1,
+                  shard_deadline_s=None,
+                  straggler=None) -> EnsembleServer:
     global _STACK
     if _STACK is None:
         pred = build_predictor(num_models=len(DEFAULT_POOL))
@@ -110,12 +145,16 @@ def _build_server(budget: float, n_hosts: int, policy: str = "modi",
                             pred, pp, fuser, fp)
     devices = jax.devices()
     placeable = (len(devices) >= n_hosts and len(devices) % n_hosts == 0)
-    plan = PlacementPlan.auto(DEFAULT_POOL, n_hosts=n_hosts,
+    plan = PlacementPlan.auto(DEFAULT_POOL, n_hosts=n_hosts, replicas=replicas,
                               devices=devices if placeable else None)
     backend = server.backend
-    if service_floor_s > 0:
+    if straggler is not None:
+        backend = _StragglerFloor(backend, service_floor_s,
+                                  straggler[0], straggler[1])
+    elif service_floor_s > 0:
         backend = _ServiceFloor(backend, service_floor_s)
-    server.backend = ClusterRouter(backend, plan=plan, fanout=fanout)
+    server.backend = ClusterRouter(backend, plan=plan, fanout=fanout,
+                                   shard_deadline_s=shard_deadline_s)
     return server
 
 
@@ -233,6 +272,67 @@ def run(n_requests: int = 16, batch_size: int = 4, budget: float = 0.2,
     recovery_ticks = (revive_ticks[0] - outage_ticks[0]
                       if outage_ticks and revive_ticks else -1)
 
+    # -- probe-driven recovery: observed liveness vs the schedule ---------
+    # Same outage, same underlying-health return tick as host-recovery,
+    # but the HealthMonitor's half-open probe revives the host at the
+    # next probe tick — no probation window, so the gap must be strictly
+    # smaller than the schedule-driven recovery above.
+    server_p = _build_server(budget, n_hosts)
+    _warm(server_p, batch_size)
+    rep_p = TrafficSimulator(
+        Scheduler(server_p, max_batch_size=batch_size, max_wait_ticks=2),
+        scenarios["probe-recovery"], records).run()
+    probe_outage = [e["tick"] for e in rep_p.trace
+                    if e["event"] == "host_hedge"]
+    probe_revive = [e["tick"] for e in rep_p.trace
+                    if e["event"] == "probe_revive"]
+    probe_recovery_ticks = (probe_revive[0] - probe_outage[0]
+                            if probe_outage and probe_revive else -1)
+    probes_run = sum(1 for e in rep_p.trace if e["event"] == "probe")
+
+    # -- straggler hedging: shard deadline vs riding out the grey host ----
+    # One grey host serves every call 10x slower; with a shard deadline
+    # the fan-out join cancels the late shard's future and re-runs its
+    # unfinished orders on a replica host, so p99 generation time tracks
+    # the deadline + a fast re-run instead of the straggler's pace.
+    floor_fast, floor_slow, deadline_s = 0.01, 0.15, 0.04
+    straggle: dict = {}
+    hedge_recompiles = 0
+    shard_hedges = 0
+    for mode in ("unhedged", "hedged"):
+        server_g = _build_server(
+            budget, n_hosts, policy="llm-blender", fanout=True,
+            service_floor_s=floor_fast, replicas=2,
+            shard_deadline_s=(deadline_s if mode == "hedged" else None),
+            straggler=(0, floor_slow))
+        _warm(server_g, batch_size)
+        reqs = requests_from_records(records[:batch_size])
+        server_g.serve_requests(reqs)  # prime every bucket on this path
+        compiles_before = server_g.generate_compiles()["total"]
+        times = []
+        for _ in range(3):
+            out = server_g.serve_requests(reqs)
+            times.append(out[0].timing["generate_s"])
+        straggle[mode] = float(np.percentile(times, 99))
+        if mode == "hedged":
+            hedge_recompiles = (server_g.generate_compiles()["total"]
+                                - compiles_before)
+            shard_hedges = server_g.backend.stats["shard_hedges"]
+        server_g.backend.close()
+
+    # -- graceful degradation: partial ensembles through the outage ------
+    # allow_degraded lets the Scheduler serve the survivors' knapsack
+    # when a host dies (degraded=True, survivor-cost settlement) instead
+    # of failing the batch when hedging is off.
+    server_d = _build_server(budget, n_hosts)
+    _warm(server_d, batch_size)
+    sched_d = Scheduler(server_d, max_batch_size=batch_size, max_wait_ticks=2,
+                        hedge=False, allow_degraded=True)
+    rep_d = TrafficSimulator(sched_d, outage, records).run()
+    degraded_responses = sched_d.stats["degraded_responses"]
+    degraded_rate = (degraded_responses / rep_d.served
+                     if rep_d.served else 0.0)
+
     p = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0  # noqa: E731
     batch_service_mean = float(np.mean(batch_service)) if batch_service else 0.0
     result = {
@@ -265,6 +365,22 @@ def run(n_requests: int = 16, batch_size: int = 4, budget: float = 0.2,
         "recovery_masked_dispatch_share": (
             masked_dispatches / len(dispatches) if dispatches else 0.0),
         "recovery_served": rep_r.served,
+        "probe_outage_tick": probe_outage[0] if probe_outage else -1,
+        "probe_revive_tick": probe_revive[0] if probe_revive else -1,
+        "probe_recovery_ticks": probe_recovery_ticks,
+        "probes_run": probes_run,
+        "probe_beats_schedule": (probe_recovery_ticks >= 0
+                                 and probe_recovery_ticks < recovery_ticks),
+        "probe_recovery_served": rep_p.served,
+        "straggler_p99_unhedged_s": straggle["unhedged"],
+        "straggler_p99_hedged_s": straggle["hedged"],
+        "hedge_p99_win": straggle["hedged"] < straggle["unhedged"],
+        "shard_deadline_s": deadline_s,
+        "shard_hedges": shard_hedges,
+        "hedge_recompiles": hedge_recompiles,
+        "degraded_responses": degraded_responses,
+        "degraded_rate": degraded_rate,
+        "degraded_served": rep_d.served,
         "compiles_after_warm": warm_compiles,
         "compiles_final": async_compiles,
         "steady_state_recompiles": async_compiles - warm_compiles,
@@ -277,6 +393,10 @@ def run(n_requests: int = 16, batch_size: int = 4, budget: float = 0.2,
         f"batch_service={batch_service_mean*1e3:.1f}ms "
         f"fanout_speedup={result['fanout_speedup']:.2f}x "
         f"recovery_ticks={result['recovery_ticks']} "
+        f"probe_recovery_ticks={result['probe_recovery_ticks']} "
+        f"straggler_p99={straggle['hedged']*1e3:.1f}ms "
+        f"(unhedged {straggle['unhedged']*1e3:.1f}ms) "
+        f"degraded_rate={result['degraded_rate']:.2f} "
         f"recovery_max={result['recovery_max_s']*1e3:.1f}ms "
         f"recompiles={result['steady_state_recompiles']}")
     return [
@@ -293,6 +413,19 @@ def run(n_requests: int = 16, batch_size: int = 4, budget: float = 0.2,
          f"recovery_ticks={result['recovery_ticks']} "
          f"unhedged_p50={result['unhedged_median_s']*1e6:.0f}us "
          f"recompiles={result['steady_state_recompiles']}"),
+        ("serve_cluster_probe_recovery", result["probe_recovery_ticks"],
+         f"schedule_ticks={result['recovery_ticks']} "
+         f"probes={result['probes_run']} "
+         f"beats_schedule={result['probe_beats_schedule']}"),
+        ("serve_cluster_straggler_hedge",
+         result["straggler_p99_hedged_s"] * 1e6,
+         f"unhedged={result['straggler_p99_unhedged_s']*1e6:.0f}us "
+         f"shard_hedges={result['shard_hedges']} "
+         f"p99_win={result['hedge_p99_win']} "
+         f"recompiles={result['hedge_recompiles']}"),
+        ("serve_cluster_degraded", result["degraded_rate"],
+         f"degraded={result['degraded_responses']} "
+         f"served={result['degraded_served']}"),
     ]
 
 

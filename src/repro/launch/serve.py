@@ -39,6 +39,7 @@ from repro.serve import (
     AdmissionControl,
     ClusterRouter,
     EnsembleServer,
+    HealthMonitor,
     PlacementPlan,
     RequestShed,
     Scheduler,
@@ -156,6 +157,25 @@ def main():
     ap.add_argument("--rebalance", action="store_true",
                     help="re-place members that lost replica redundancy "
                          "onto surviving hosts at the next maintenance tick")
+    ap.add_argument("--probe-interval", type=int, default=None,
+                    help="run health probes every this many scheduler "
+                         "ticks (probe-driven death/revival replaces the "
+                         "--recover schedule, which then describes when "
+                         "each host's underlying health returns)")
+    ap.add_argument("--probe-failures", type=int, default=2,
+                    help="consecutive probe failures that open a host's "
+                         "circuit breaker (mark it dead)")
+    ap.add_argument("--shard-deadline", type=float, default=None,
+                    metavar="SECONDS",
+                    help="wall-clock deadline per fan-out shard; a late "
+                         "shard is cancelled and hedged onto replica hosts")
+    ap.add_argument("--hedge", action="store_true",
+                    help="re-route grey-slow dispatches to an alive "
+                         "replica at consume time (straggler hedging)")
+    ap.add_argument("--allow-degraded", action="store_true",
+                    help="serve partial-ensemble responses (knapsack over "
+                         "the survivors, tagged degraded) when members "
+                         "are unavailable, instead of failing the batch")
     ap.add_argument("--async", dest="async_dispatch", action="store_true",
                     help="serve batches on a dispatch worker thread so "
                          "submit never blocks on a batch (--online only)")
@@ -183,10 +203,23 @@ def main():
             for pair in args.recover.split(","):
                 host, _, tick = pair.partition(":")
                 recovery.setdefault(int(host), []).append(int(tick))
+        recovery = {h: tuple(sorted(t)) for h, t in recovery.items()}
+        health = None
+        if args.probe_interval is not None:
+            # probe-driven health: the recovery schedule feeds the
+            # monitor's half-open probes instead of the router's
+            # schedule-driven revival
+            health = HealthMonitor(plan,
+                                   probe_interval=args.probe_interval,
+                                   probe_failures=args.probe_failures,
+                                   recovery=recovery)
+            recovery = {}
         server.backend = ClusterRouter(
             server.backend, plan=plan, fanout=args.fanout,
-            host_recovery={h: tuple(sorted(t)) for h, t in recovery.items()},
-            probation_ticks=args.probation_ticks, rebalance=args.rebalance)
+            host_recovery=recovery,
+            probation_ticks=args.probation_ticks, rebalance=args.rebalance,
+            health=health, hedge_stragglers=args.hedge,
+            shard_deadline_s=args.shard_deadline)
         print(f"cluster placement ({args.placement}, {args.hosts} hosts"
               + (", fanout" if args.fanout else "") + "):")
         print(plan.describe())
@@ -213,7 +246,8 @@ def main():
         scheduler = Scheduler(server, max_batch_size=args.max_batch_size,
                               max_wait_ticks=args.max_wait_ticks,
                               admission=admission,
-                              sync=not args.async_dispatch)
+                              sync=not args.async_dispatch,
+                              allow_degraded=args.allow_degraded)
         futures = [
             scheduler.submit(req)
             for req in requests_from_records(

@@ -15,7 +15,7 @@ list into requests and goes through the exact same path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -59,7 +59,16 @@ class EnsembleRequest:
 
 @dataclasses.dataclass
 class EnsembleResponse:
-    """The engine's answer to one :class:`EnsembleRequest`."""
+    """The engine's answer to one :class:`EnsembleRequest`.
+
+    ``degraded``/``missing_members`` mark a *partial-ensemble* answer:
+    some pool members were unavailable (failed, or stranded on dead
+    hosts) and the knapsack was re-solved over the survivors only —
+    best-effort quality inside the same ε budget, rather than no answer.
+    ``survivor_cost`` is the full-ensemble cost of just the servable
+    members (equal to ``realized_cost / cost_fraction`` when nothing is
+    missing) — the base the scheduler settles degraded batches against
+    in its rolling admission window."""
 
     text: str  # GEN-FUSER output
     member_texts: List[Optional[str]]  # [N], None where unselected
@@ -69,6 +78,9 @@ class EnsembleResponse:
     predicted_quality: np.ndarray  # [N] predictor scores r_hat
     policy_name: str  # policy that produced the mask
     timing: Dict[str, float]  # stage -> seconds (predict/select/generate/fuse/total)
+    degraded: bool = False  # True when members were masked/excluded
+    missing_members: Tuple[int, ...] = ()  # the unavailable members
+    survivor_cost: float = 0.0  # full cost over servable members only
 
 
 def requests_from_records(records: List[Record], **overrides) -> List[EnsembleRequest]:

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Dict, List, Protocol, Sequence, Tuple, Union, runtime_checkable
 
 import numpy as np
@@ -172,11 +173,21 @@ class FailureInjector:
     call counts — not wall time — a traffic-simulator run that injects
     failures is exactly replayable: same seed, same arrivals, same calls,
     same faults.  Hedged retries consume call indices like any other
-    call, so a member that fails call 2 can succeed on call 3."""
+    call, so a member that fails call 2 can succeed on call 3.
+
+    ``slow`` is the *grey-failure* schedule: call indices that complete
+    normally but only after sleeping ``slow_s`` wall seconds — a member
+    alive but straggling.  Slowness touches wall clock only, never the
+    logical trace, so slowed runs stay byte-identical to fast ones;
+    it exists to give shard deadlines and straggler hedging something
+    real to race against."""
 
     inner: MemberBackend
     failures: Dict[int, Sequence[int]] = dataclasses.field(default_factory=dict)
+    slow: Dict[int, Sequence[int]] = dataclasses.field(default_factory=dict)
+    slow_s: float = 0.0
     calls: Dict[int, int] = dataclasses.field(default_factory=dict)
+    slowed: int = 0  # grey-slow calls actually served (diagnostics)
 
     def num_members(self) -> int:
         return self.inner.num_members()
@@ -189,6 +200,9 @@ class FailureInjector:
             raise RuntimeError(
                 f"injected failure: member {member_idx}, call {k}"
             )
+        if self.slow_s > 0 and k in tuple(self.slow.get(member_idx, ())):
+            self.slowed += 1
+            time.sleep(self.slow_s)
         return self.inner.generate(member_idx, records, max_new_tokens)
 
     # optional-protocol hooks forward to the wrapped backend

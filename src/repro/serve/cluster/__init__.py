@@ -14,20 +14,30 @@ The cluster subsystem marries ``repro.sharding`` with the serving stack:
   :class:`~repro.serve.backends.HostFailure`, fans per-host shards out
   to concurrent executors (``fanout=True``), and re-admits recovered
   hosts after a probation window (``host_recovery``/``probation_ticks``);
+* :class:`HealthMonitor` — deterministic liveness probes feeding
+  per-host circuit breakers (closed → open on consecutive probe
+  failures → half-open with exponential backoff → closed on a
+  successful revival probe), so death and recovery are *observed*
+  during maintenance instead of waiting on a dispatch fault or a
+  static revival schedule;
 * :class:`DispatchWorker` — the bounded-inbox thread behind
   ``Scheduler(sync=False)``, so ``submit`` never blocks on a batch;
 * :class:`HostExecutor` / :class:`HostExecutorPool` — one bounded-queue
   worker thread per live host, the fabric fan-out shards run on
-  (executors retire with dead hosts and respawn lazily after revival).
+  (executors retire with dead hosts and respawn lazily after revival);
+  :class:`ShardFuture` supports cancellation, which the router's
+  ``shard_deadline_s`` straggler hedging uses to abandon a late shard.
 """
 
+from repro.serve.cluster.health import HealthMonitor
 from repro.serve.cluster.placement import (
     HostSpec,
     MemberPlacement,
     PlacementPlan,
 )
-from repro.serve.cluster.router import ClusterRouter
+from repro.serve.cluster.router import ClusterRouter, current_dispatch_host
 from repro.serve.cluster.worker import (
+    CancelledShard,
     DispatchWorker,
     HostExecutor,
     HostExecutorPool,
@@ -36,8 +46,10 @@ from repro.serve.cluster.worker import (
 )
 
 __all__ = [
+    "CancelledShard",
     "ClusterRouter",
     "DispatchWorker",
+    "HealthMonitor",
     "HostExecutor",
     "HostExecutorPool",
     "HostSpec",
@@ -45,4 +57,5 @@ __all__ = [
     "MemberPlacement",
     "PlacementPlan",
     "ShardFuture",
+    "current_dispatch_host",
 ]

@@ -1,0 +1,197 @@
+"""Probe-driven host health: liveness observed, not scheduled.
+
+:class:`HealthMonitor` replaces schedule-only revival
+(``ClusterRouter.host_recovery`` consumed blindly at its tick) with
+*observed* liveness: at every ``probe_interval`` scheduler ticks the
+monitor issues one deterministic probe per host and feeds the outcomes
+through a per-host circuit breaker:
+
+* **closed** — the host is routable.  Probes run every interval; a
+  probe failure increments a consecutive-failure counter, and at
+  ``probe_failures`` consecutive failures the breaker **opens**: the
+  host is marked dead in the :class:`PlacementPlan` (its members fail
+  over or are pre-masked) *without waiting for a dispatch to explode* —
+  the crash-on-probe path.
+* **open** — the host is dead (probe-opened, or dispatch-opened by a
+  :class:`~repro.serve.backends.HostFailure` the router absorbed; the
+  monitor adopts those deaths at its next pass).  A newly opened
+  breaker is immediately eligible for a **half-open** probe; each
+  *failed* half-open probe backs the next attempt off exponentially
+  (``backoff_ticks`` doubling per failure, capped at ``backoff_cap``) —
+  a host that stays down is probed ever more rarely, never hammered.
+* **half-open → closed** — a successful half-open probe revives the
+  host through :meth:`PlacementPlan.revive_host` (the router follows up
+  with :meth:`PlacementPlan.rebalance` when armed) and resets the
+  failure count and backoff.
+
+Probe outcomes are DETERMINISTIC, in the same style as the
+member-level :class:`~repro.serve.backends.FailureInjector` and the
+router's ``host_failures`` — keyed on per-host *probe indices* and
+logical ticks, never wall time:
+
+* ``probe_faults`` maps a host to the 0-based probe indices (that
+  host's n-th probe over the monitor's lifetime) that FAIL regardless
+  of underlying health — one isolated index is a flaky probe (stays
+  under the threshold, trace-visible, harmless); ``probe_failures``
+  consecutive indices are a crash-on-probe kill.
+* ``recovery`` maps a host to the logical ticks at which its
+  *underlying* health returns (consumed in order, like the router's
+  schedule-driven ``host_recovery`` — which this replaces when a
+  monitor is installed).  A half-open probe succeeds exactly when an
+  unconsumed recovery tick has arrived and the probe index is not
+  scheduled to fault.
+
+Because probes run only inside the router's drained maintenance pass
+(:meth:`ClusterRouter.maintain`, behind the static
+``maintenance_pending`` decision) and consult only schedules and
+drained plan state, the trace they produce is byte-identical across
+sync/async dispatch and sequential/fan-out routing — the chaos tier's
+anchor invariant survives the health subsystem.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+from repro.serve.cluster.placement import PlacementPlan
+
+CLOSED = "closed"
+OPEN = "open"
+
+
+@dataclasses.dataclass
+class _Breaker:
+    """Per-host circuit-breaker state (all mutations happen inside the
+    drained maintenance pass — no lock needed)."""
+
+    state: str = CLOSED
+    failures: int = 0  # consecutive probe failures while closed
+    probes: int = 0  # per-host probe index (the fault-schedule key)
+    backoff: int = 1  # ticks until the next half-open attempt
+    next_probe: int = 0  # earliest tick an open breaker may half-open probe
+
+
+@dataclasses.dataclass
+class HealthMonitor:
+    """Deterministic liveness probes + per-host circuit breakers.
+
+    ``probe_failures`` is the consecutive-failure threshold that opens a
+    closed breaker; ``backoff_ticks`` seeds the exponential half-open
+    backoff (doubled per failed half-open probe, capped at
+    ``backoff_cap``).  :meth:`run_probes` mutates the plan (deaths and
+    revivals) and returns trace-ready event dicts; the router owns
+    executor retirement and stats."""
+
+    plan: PlacementPlan
+    probe_interval: int = 1
+    probe_failures: int = 2
+    probe_faults: Dict[int, Sequence[int]] = dataclasses.field(
+        default_factory=dict)
+    recovery: Dict[int, Sequence[int]] = dataclasses.field(
+        default_factory=dict)
+    backoff_ticks: int = 1
+    backoff_cap: int = 8
+    _breakers: Dict[int, _Breaker] = dataclasses.field(default_factory=dict)
+    _recovered: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.probe_interval < 1:
+            raise ValueError("probe_interval must be >= 1")
+        if self.probe_failures < 1:
+            raise ValueError("probe_failures must be >= 1")
+        if self.backoff_ticks < 1:
+            raise ValueError("backoff_ticks must be >= 1")
+
+    # ------------------------------------------------------------------
+    def probe_due(self, now: int) -> bool:
+        """Whether a probe pass runs at this tick.  A pure function of
+        the tick and the static interval — the property the Scheduler's
+        ``maintenance_pending`` drain barrier needs to decide
+        identically in sync and async dispatch modes."""
+        return now > 0 and now % self.probe_interval == 0
+
+    def breaker(self, host_id: int) -> _Breaker:
+        b = self._breakers.get(host_id)
+        if b is None:
+            b = self._breakers[host_id] = _Breaker(
+                backoff=self.backoff_ticks)
+        return b
+
+    def state(self, host_id: int) -> str:
+        """The breaker state routing sees (dispatch-observed deaths the
+        monitor has not yet adopted still report closed here)."""
+        return self.breaker(host_id).state
+
+    # ------------------------------------------------------------------
+    def _probe_ok(self, host_id: int, probe_idx: int, now: int,
+                  half_open: bool) -> bool:
+        if probe_idx in tuple(self.probe_faults.get(host_id, ())):
+            return False
+        if not half_open:
+            return True  # a routable host answers unless a fault is scheduled
+        # half-open: the dead host answers once its underlying health has
+        # returned (the next unconsumed recovery tick has arrived)
+        ticks = tuple(self.recovery.get(host_id, ()))
+        consumed = self._recovered.get(host_id, 0)
+        return consumed < len(ticks) and ticks[consumed] <= now
+
+    def run_probes(self, now: int) -> List[dict]:
+        """One probe pass over every host, in host order.  MUST run on
+        drained state (the router's maintenance pass) — probe-driven
+        deaths and revivals mutate the plan.  Returns trace-ready event
+        dicts: ``probe`` per issued probe, ``probe_death`` when a
+        breaker opens, ``probe_revive`` when a half-open probe closes
+        one."""
+        events: List[dict] = []
+        for spec in self.plan.hosts:
+            h = spec.host_id
+            b = self.breaker(h)
+            if b.state == CLOSED and h in self.plan.dead_hosts:
+                # adopt a dispatch-observed death: the breaker opens with
+                # no event of its own (the fault already traced as a
+                # host_hedge) and is immediately probe-eligible
+                b.state = OPEN
+                b.failures = 0
+                b.backoff = self.backoff_ticks
+                b.next_probe = now
+            if b.state == CLOSED:
+                k = b.probes
+                b.probes += 1
+                ok = self._probe_ok(h, k, now, half_open=False)
+                events.append({"event": "probe", "host": h, "probe": k,
+                               "ok": ok, "half_open": False})
+                if ok:
+                    b.failures = 0
+                    continue
+                b.failures += 1
+                if b.failures < self.probe_failures:
+                    continue
+                stranded = self.plan.mark_host_dead(h)
+                b.state = OPEN
+                b.backoff = self.backoff_ticks
+                b.next_probe = now + b.backoff
+                events.append({"event": "probe_death", "host": h,
+                               "failures": b.failures,
+                               "stranded": stranded})
+            else:  # OPEN: half-open probe, gated by the backoff window
+                if now < b.next_probe:
+                    continue
+                k = b.probes
+                b.probes += 1
+                ok = self._probe_ok(h, k, now, half_open=True)
+                events.append({"event": "probe", "host": h, "probe": k,
+                               "ok": ok, "half_open": True})
+                if ok:
+                    self._recovered[h] = self._recovered.get(h, 0) + 1
+                    restored = self.plan.revive_host(h)
+                    b.state = CLOSED
+                    b.failures = 0
+                    b.backoff = self.backoff_ticks
+                    events.append({"event": "probe_revive", "host": h,
+                                   "recovered": restored,
+                                   "after_probes": k + 1})
+                else:
+                    b.next_probe = now + b.backoff
+                    b.backoff = min(b.backoff * 2, self.backoff_cap)
+        return events

@@ -191,6 +191,18 @@ class PlacementPlan:
                     return h
             return None
 
+    def replica_host(self, member_idx: int,
+                     avoid: Sequence[int] = ()) -> Optional[int]:
+        """The first *alive* replica host not in ``avoid`` — the hedging
+        target when the member's routed host straggles — or None when
+        the member has no alternative."""
+        skip = set(avoid)
+        with self._lock:
+            for h in self.placements[member_idx].hosts:
+                if h not in skip and h not in self.dead_hosts:
+                    return h
+            return None
+
     def dead_members(self) -> List[int]:
         """Members with no surviving replica (a consistent snapshot: the
         plan cannot flip hosts mid-iteration)."""

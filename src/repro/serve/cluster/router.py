@@ -47,6 +47,26 @@ pre-masking its members.  ``rebalance=True`` additionally re-places
 members that lost replica redundancy onto the least-loaded surviving
 hosts at the next maintenance pass.
 
+Installing a :class:`~repro.serve.cluster.health.HealthMonitor`
+(``health=``) upgrades recovery from scheduled to *observed*: the
+maintenance pass runs the monitor's deterministic liveness probes,
+whose circuit breakers mark hosts dead on consecutive probe failures
+(no dispatch has to explode first) and revive them through half-open
+probes with exponential backoff — strictly faster than schedule-driven
+revival, which must additionally sit out its probation window.
+
+Grey failures — hosts alive but slow — get two defenses.
+``host_stragglers`` + ``hedge_stragglers=True`` is the *deterministic*
+one: dispatch indices scheduled as stragglers are re-routed at
+consume time to an alive replica (the replica's dispatch counter
+advances too), identically in sequential and fan-out routing, so
+hedged traces stay byte-identical.  ``shard_deadline_s`` is the
+*wall-clock* one (fan-out only): a shard that misses its deadline is
+cancelled and its unfinished calls re-served on replica hosts
+(earliest completion wins — a late original result is byte-identical
+anyway).  Like real mid-shard faults, wall-clock hedges bypass
+dispatch counters; injected schedules never hit this path.
+
 Host-level failure *injection* lives here too (``host_failures``): the
 schedule is keyed on per-host dispatch counts — the n-th generation call
 routed to host *h* raises — so a traffic scenario that kills a host is
@@ -57,6 +77,7 @@ exactly replayable, like the member-level
 from __future__ import annotations
 
 import contextlib
+import contextvars
 import dataclasses
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -68,9 +89,23 @@ from repro.serve.backends import (
     MemberBackend,
     MemberFailure,
 )
+from repro.serve.cluster.health import HealthMonitor
 from repro.serve.cluster.placement import PlacementPlan
 from repro.serve.cluster.worker import HostExecutorPool
 from repro.sharding.api import axis_rules
+
+# The host a generation call is executing on, visible to the wrapped
+# backend (set around every inner.generate).  Host-aware test/bench
+# wrappers (e.g. a straggler floor that slows one host's wall clock
+# without touching the logical trace) key on this.
+_CURRENT_HOST: contextvars.ContextVar[Optional[int]] = contextvars.ContextVar(
+    "repro_serve_current_host", default=None)
+
+
+def current_dispatch_host() -> Optional[int]:
+    """The placement host of the generation call running on this thread,
+    or None outside a routed call."""
+    return _CURRENT_HOST.get()
 
 
 @dataclasses.dataclass
@@ -96,7 +131,16 @@ class ClusterRouter:
     recovers (consumed in order — a host can die, revive, and die
     again); ``probation_ticks`` delays each re-admission past the
     recovery tick.  ``fanout=True`` executes per-host shards
-    concurrently on a :class:`HostExecutorPool`."""
+    concurrently on a :class:`HostExecutorPool`.
+
+    ``health`` installs a :class:`HealthMonitor` whose probes run inside
+    the maintenance pass (probe-opened deaths and half-open revivals —
+    use it *instead of* ``host_recovery``, whose schedule it replaces).
+    ``host_stragglers`` maps a host id to the dispatch indices that are
+    grey-slow on it; with ``hedge_stragglers=True`` those dispatches
+    re-route to an alive replica at consume time.  ``shard_deadline_s``
+    bounds each fan-out shard's wall-clock service; a late shard is
+    cancelled and hedged onto replica hosts."""
 
     inner: MemberBackend
     plan: PlacementPlan
@@ -108,10 +152,17 @@ class ClusterRouter:
         default_factory=dict)
     probation_ticks: int = 0
     rebalance: bool = False
+    health: Optional[HealthMonitor] = None
+    host_stragglers: Dict[int, Sequence[int]] = dataclasses.field(
+        default_factory=dict)
+    hedge_stragglers: bool = False
+    shard_deadline_s: Optional[float] = None
     record_audit: bool = False
     stats: Dict[str, int] = dataclasses.field(default_factory=lambda: {
         "dispatches": 0, "failovers": 0, "host_faults": 0,
-        "fanout_batches": 0, "shards": 0, "revivals": 0, "rebalanced": 0})
+        "fanout_batches": 0, "shards": 0, "revivals": 0, "rebalanced": 0,
+        "straggler_hedges": 0, "stragglers_unhedged": 0, "shard_hedges": 0,
+        "probes": 0, "probe_deaths": 0, "probe_revivals": 0})
     # (host, member, dispatch_idx, host_was_dead) per routed dispatch —
     # the chaos property suite's no-dead-dispatch evidence
     audit: List[Tuple[int, int, int, bool]] = dataclasses.field(
@@ -129,6 +180,9 @@ class ClusterRouter:
             raise ValueError(
                 f"plan places {self.plan.n_members} members but the backend "
                 f"serves {self.inner.num_members()}")
+        if self.health is not None and self.health.plan is not self.plan:
+            raise ValueError(
+                "health monitor must observe the router's own plan")
         if self.fanout:
             self._pool = HostExecutorPool(capacity=self.executor_capacity)
 
@@ -139,18 +193,20 @@ class ClusterRouter:
     def generate(self, member_idx: int, records: Sequence,
                  max_new_tokens: MaxNewTokens) -> List[str]:
         while True:
-            host = self.plan.primary_host(member_idx)
-            if host is None:
-                # unroutable: every replica host is dead.  The engine
-                # should have masked this member out before generating;
-                # reaching here means the death happened mid-batch.
-                raise HostFailure(
-                    next(iter(self.plan.placements[member_idx].hosts)),
-                    member_idxs=(member_idx,))
             try:
-                self._consume_dispatch(host, member_idx)
-                return self._run(host, member_idx, records, max_new_tokens)
+                routed = self._consume_routed(member_idx)
+                if routed is None:
+                    # unroutable: every replica host is dead.  The engine
+                    # should have masked this member out before generating;
+                    # reaching here means the death happened mid-batch.
+                    raise HostFailure(
+                        next(iter(self.plan.placements[member_idx].hosts)),
+                        member_idxs=(member_idx,))
+                return self._run(routed[0], member_idx, records,
+                                 max_new_tokens)
             except HostFailure as hf:
+                if hf.member_idxs:
+                    raise  # already escalated (unroutable / stranded)
                 newly_dead = self._absorb_host_fault(hf.host_id)
                 if not newly_dead and self.plan.primary_host(member_idx) is not None:
                     # every member on the dead host has a surviving
@@ -161,6 +217,34 @@ class ClusterRouter:
                     continue
                 raise HostFailure(hf.host_id, member_idxs=tuple(newly_dead),
                                   cause=hf.cause) from hf.cause
+
+    def _consume_routed(self, member_idx: int) -> Optional[Tuple[int, int]]:
+        """Resolve the member's primary host and consume its dispatch
+        index (raising any injected fault).  When straggler hedging is
+        armed and this dispatch index is grey-slow on its host, re-route
+        to the first alive replica and consume *its* dispatch index too
+        — the hedge is part of the deterministic consume order, so
+        sequential and fan-out routing hedge (and trace) identically.
+        Returns ``(host, dispatch_idx)``, or None when unroutable."""
+        host = self.plan.primary_host(member_idx)
+        if host is None:
+            return None
+        k = self._consume_dispatch(host, member_idx)
+        if k in tuple(self.host_stragglers.get(host, ())):
+            if not self.hedge_stragglers:
+                with self._lock:
+                    self.stats["stragglers_unhedged"] += 1
+            else:
+                alt = self.plan.replica_host(member_idx, avoid=(host,))
+                if alt is None:
+                    with self._lock:
+                        self.stats["stragglers_unhedged"] += 1
+                else:
+                    with self._lock:
+                        self.stats["straggler_hedges"] += 1
+                    k = self._consume_dispatch(alt, member_idx)
+                    host = alt
+        return host, k
 
     def _consume_dispatch(self, host: int, member_idx: int) -> int:
         """Advance the host's dispatch counter (raising its injected
@@ -184,8 +268,12 @@ class ClusterRouter:
         """The actual inner generate, under the pinned host's mesh rules."""
         rules = self.plan.member_rules(member_idx, host=host)
         ctx = axis_rules(rules) if rules is not None else contextlib.nullcontext()
-        with ctx:
-            return self.inner.generate(member_idx, records, max_new_tokens)
+        token = _CURRENT_HOST.set(host)
+        try:
+            with ctx:
+                return self.inner.generate(member_idx, records, max_new_tokens)
+        finally:
+            _CURRENT_HOST.reset(token)
 
     def _absorb_host_fault(self, host_id: int) -> List[int]:
         """Mark a faulted host dead and retire its executor; returns the
@@ -237,12 +325,8 @@ class ClusterRouter:
         for order, call in enumerate(calls):
             j = call.member_idx
             while True:
-                host = self.plan.primary_host(j)
-                if host is None:
-                    first = next(iter(self.plan.placements[j].hosts))
-                    return planned, HostFailure(first, member_idxs=(j,))
                 try:
-                    k = self._consume_dispatch(host, j)
+                    routed = self._consume_routed(j)
                 except HostFailure as hf:
                     newly_dead = self._absorb_host_fault(hf.host_id)
                     if not newly_dead and self.plan.primary_host(j) is not None:
@@ -252,7 +336,10 @@ class ClusterRouter:
                     return planned, HostFailure(
                         hf.host_id, member_idxs=tuple(newly_dead),
                         cause=hf.cause)
-                planned.append(_PlannedCall(order, call, host, k))
+                if routed is None:
+                    first = next(iter(self.plan.placements[j].hosts))
+                    return planned, HostFailure(first, member_idxs=(j,))
+                planned.append(_PlannedCall(order, call, routed[0], routed[1]))
                 break
         return planned, None
 
@@ -272,36 +359,50 @@ class ClusterRouter:
             self.stats["fanout_batches"] += 1
             self.stats["shards"] += len(shards)
 
-        def shard_fn(shard: List[_PlannedCall]):
-            done: Dict[int, List[str]] = {}
+        def shard_fn(shard: List[_PlannedCall], done: Dict[int, List[str]]):
+            # `done` is shared with the joining thread so a deadline
+            # hedge can see (and keep) whatever the straggling shard
+            # already produced; dict item writes are atomic under the GIL
             for p in shard:
                 try:
                     done[p.order] = self._run(p.host, p.call.member_idx,
                                               p.call.records,
                                               p.call.max_new_tokens)
                 except BaseException as exc:
-                    return done, (p.order, p.call.member_idx, exc)
-            return done, None
+                    return (p.order, p.call.member_idx, exc)
+            return None
 
         results: Dict[int, List[str]] = {}
         errors: List[Tuple[int, int, BaseException]] = []
-        futures = []
+        pending = []
         for host, shard in sorted(shards.items()):
+            done: Dict[int, List[str]] = {}
             if host in self.plan.dead_hosts:
                 # the host died later in the planning pass, after these
                 # earlier dispatches were already consumed (sequential
                 # routing would have run them pre-death too).  Run the
                 # shard on the serving thread: submitting would silently
                 # respawn an executor the death already retired.
-                done, err = shard_fn(shard)
+                err = shard_fn(shard, done)
                 results.update(done)
                 if err is not None:
                     errors.append(err)
             else:
-                futures.append(self._pool.submit(
-                    host, lambda s=shard: shard_fn(s)))
-        for f in futures:
-            done, err = f.result()
+                pending.append((shard, done, self._pool.submit(
+                    host, lambda s=shard, d=done: shard_fn(s, d))))
+        for shard, done, f in pending:
+            try:
+                err = f.result(timeout=self.shard_deadline_s)
+            except TimeoutError:
+                # straggling shard: cancel (drops it if still queued;
+                # best-effort if running) and re-serve its unfinished
+                # calls on replica hosts.  Earliest completion wins —
+                # a late original result is byte-identical, so keeping
+                # whichever landed first never changes outputs.
+                f.cancel()
+                with self._lock:
+                    self.stats["shard_hedges"] += 1
+                err = self._hedge_shard(shard, done)
             results.update(done)
             if err is not None:
                 errors.append(err)
@@ -327,6 +428,29 @@ class ClusterRouter:
                 results[p.order] = self._sequential_call(p.call)
         return results
 
+    def _hedge_shard(self, shard: List[_PlannedCall],
+                     done: Dict[int, List[str]]
+                     ) -> Optional[Tuple[int, int, BaseException]]:
+        """Re-serve a timed-out shard's unfinished calls on replica
+        hosts (falling back to the original when no replica is alive),
+        inline on the serving thread.  Wall-clock hedges carry the same
+        documented real-fault asymmetry as mid-shard aborts: they bypass
+        dispatch counters, so injected schedules are never double-fired.
+        The straggler keeps running; ``setdefault`` lets the earliest
+        completion win."""
+        for p in shard:
+            if p.order in done:
+                continue
+            alt = self.plan.replica_host(p.call.member_idx, avoid=(p.host,))
+            target = p.host if alt is None else alt
+            try:
+                res = self._run(target, p.call.member_idx, p.call.records,
+                                p.call.max_new_tokens)
+            except BaseException as exc:
+                return (p.order, p.call.member_idx, exc)
+            done.setdefault(p.order, res)
+        return None
+
     # -- recovery maintenance --------------------------------------------
     def _next_revive_tick(self, host_id: int) -> Optional[int]:
         """The tick at which the host's next scheduled recovery (plus
@@ -347,6 +471,8 @@ class ClusterRouter:
         :meth:`maintain` decide precisely on the drained state, so sync
         and async modes make identical maintenance decisions at
         identical ticks."""
+        if self.health is not None and self.health.probe_due(now):
+            return True  # probe_due is pure in (tick, interval): static
         for h in self.host_recovery:
             t = self._next_revive_tick(h)
             if t is not None and now >= t:
@@ -374,6 +500,21 @@ class ClusterRouter:
         already revived) is consumed silently: recovery ticks are
         absolute scenario time, not death-relative."""
         events: List[dict] = []
+        if self.health is not None and self.health.probe_due(now):
+            probe_events = self.health.run_probes(now)
+            for ev in probe_events:
+                kind = ev["event"]
+                with self._lock:
+                    if kind == "probe":
+                        self.stats["probes"] += 1
+                    elif kind == "probe_death":
+                        self.stats["probe_deaths"] += 1
+                    elif kind == "probe_revive":
+                        self.stats["probe_revivals"] += 1
+                        self.stats["revivals"] += 1
+                if kind == "probe_death" and self._pool is not None:
+                    self._pool.retire(ev["host"])
+            events.extend(probe_events)
         for h in sorted(self.host_recovery):
             t = self._next_revive_tick(h)
             if t is None or now < t:

@@ -46,7 +46,8 @@ class DispatchWorker:
     """Single-threaded FIFO executor with a bounded inbox."""
 
     def __init__(self, fn: Callable, capacity: int = 64,
-                 name: str = "dispatch-worker"):
+                 name: str = "dispatch-worker",
+                 on_orphan: Optional[Callable] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self._fn = fn
@@ -55,6 +56,12 @@ class DispatchWorker:
         self._closed = False
         self.processed = 0
         self.max_depth = 0
+        self.orphaned = 0
+        self._on_orphan = on_orphan
+        # serialises the closed-check-then-enqueue step against close()
+        # flipping the flag, so no producer can enqueue after the orphan
+        # drain has run
+        self._submit_lock = threading.Lock()
         self.errors: List[BaseException] = []  # post-resolution diagnostics
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=name)
@@ -63,20 +70,24 @@ class DispatchWorker:
     # -- producer side ---------------------------------------------------
     def submit(self, job) -> None:
         """Enqueue a job, blocking while the inbox is full."""
-        if self._closed:
-            raise RuntimeError("worker is closed")
-        self._inbox.put(job)
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError("worker is closed")
+            # blocking put is safe under the lock: the worker thread
+            # drains independently, so space always frees up
+            self._inbox.put(job)
         self.max_depth = max(self.max_depth, self._inbox.qsize())
 
     def try_submit(self, job) -> None:
         """Enqueue a job or raise :class:`InboxFull` without blocking."""
-        if self._closed:
-            raise RuntimeError("worker is closed")
-        try:
-            self._inbox.put_nowait(job)
-        except queue.Full:
-            raise InboxFull(
-                f"dispatch inbox at capacity ({self.capacity})") from None
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError("worker is closed")
+            try:
+                self._inbox.put_nowait(job)
+            except queue.Full:
+                raise InboxFull(
+                    f"dispatch inbox at capacity ({self.capacity})") from None
         self.max_depth = max(self.max_depth, self._inbox.qsize())
 
     def full(self) -> bool:
@@ -92,12 +103,33 @@ class DispatchWorker:
         self._inbox.join()
 
     def close(self) -> None:
-        """Drain, stop the thread, and reject further submits."""
-        if self._closed:
-            return
-        self._closed = True
+        """Drain, stop the thread, and reject further submits.
+
+        An accepted job is never silently dropped: ``try_submit`` can
+        pass the closed check and enqueue *behind* the stop sentinel
+        (the submit/close race), so after the thread exits any jobs
+        left in the inbox are handed to ``on_orphan`` — the owner
+        resolves their futures (the Scheduler fails them with the same
+        "worker is closed" error a losing ``try_submit`` would see) so
+        no accepted job's future can hang."""
+        with self._submit_lock:
+            if self._closed:
+                return
+            self._closed = True
         self._inbox.put(_STOP)
         self._thread.join()
+        while True:  # jobs that raced past the closed check land here
+            try:
+                job = self._inbox.get_nowait()
+            except queue.Empty:
+                break
+            try:
+                if job is not _STOP:
+                    self.orphaned += 1
+                    if self._on_orphan is not None:
+                        self._on_orphan(job)
+            finally:
+                self._inbox.task_done()
 
     # -- worker side -----------------------------------------------------
     def _loop(self) -> None:
@@ -116,6 +148,11 @@ class DispatchWorker:
                 self._inbox.task_done()
 
 
+class CancelledShard(RuntimeError):
+    """Raised by :meth:`ShardFuture.result` when the shard was cancelled
+    before its executor ran it."""
+
+
 class ShardFuture:
     """Resolution handle for one host shard submitted to a HostExecutor."""
 
@@ -123,6 +160,7 @@ class ShardFuture:
         self._done = threading.Event()
         self._result = None
         self._error: Optional[BaseException] = None
+        self._cancelled = False
 
     def set_result(self, result) -> None:
         self._result = result
@@ -134,6 +172,22 @@ class ShardFuture:
 
     def done(self) -> bool:
         return self._done.is_set()
+
+    def cancel(self) -> bool:
+        """Best-effort cancellation (the deadline/hedging hook).
+
+        Returns False when the shard already resolved.  A queued shard
+        is dropped by its executor (``result()`` then raises
+        :class:`CancelledShard`); a shard already *running* completes
+        normally — the hedger tolerates that by letting the earliest
+        completion win."""
+        if self._done.is_set():
+            return False
+        self._cancelled = True
+        return True
+
+    def cancelled(self) -> bool:
+        return self._cancelled
 
     def result(self, timeout: Optional[float] = None):
         if not self._done.wait(timeout):
@@ -186,6 +240,10 @@ class HostExecutor:
                 if job is _STOP:
                     return
                 fn, future = job
+                if future.cancelled():
+                    future.set_error(CancelledShard(
+                        f"shard cancelled before host {self.host_id} ran it"))
+                    continue
                 try:
                     future.set_result(fn())
                 except BaseException as exc:
@@ -208,11 +266,16 @@ class HostExecutorPool:
         self.capacity = capacity
         self._executors: Dict[int, HostExecutor] = {}
         self._lock = threading.Lock()
+        self._closed = False
         self.spawned = 0
         self.retired = 0
 
     def executor(self, host_id: int) -> HostExecutor:
         with self._lock:
+            if self._closed:
+                # lazy respawn after close() would leak a thread nothing
+                # will ever join — refuse loudly instead
+                raise RuntimeError("executor pool is closed")
             ex = self._executors.get(host_id)
             if ex is None:
                 ex = self._executors[host_id] = HostExecutor(
@@ -236,8 +299,16 @@ class HostExecutorPool:
         with self._lock:
             return sorted(self._executors)
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
     def close(self) -> None:
+        """Stop every executor; idempotent; further submits raise."""
         with self._lock:
+            if self._closed:
+                return
+            self._closed = True
             executors = list(self._executors.values())
             self._executors.clear()
         for ex in executors:

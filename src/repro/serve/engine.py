@@ -394,6 +394,10 @@ class EnsembleServer:
 
         frac = np.asarray(realized_cost_fraction(jnp.asarray(mask), jnp.asarray(costs)))
         realized = np.sum(np.where(mask, costs, 0.0), axis=1)
+        # full-ensemble cost over the servable members only — the base a
+        # degraded batch settles against (ε re-targeted the survivors)
+        servable = np.asarray([j not in dropped for j in range(costs.shape[1])])
+        survivor_cost = np.sum(np.where(servable, costs, 0.0), axis=1)
         total = time.perf_counter() - t_start
         timing = {
             "predict_s": t_predict, "select_s": t_select,
@@ -417,6 +421,9 @@ class EnsembleServer:
                 predicted_quality=r_hat[i],
                 policy_name=policy_names[i],
                 timing=dict(timing),
+                degraded=bool(dropped),
+                missing_members=tuple(sorted(dropped)),
+                survivor_cost=float(survivor_cost[i]),
             ))
         return responses
 

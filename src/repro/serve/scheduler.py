@@ -126,6 +126,12 @@ class ResponseFuture:
         if not self._done:
             self._scheduler._dispatch_for(self)
             if not self._resolved.wait(timeout):
+                # the batch stays in flight on the worker — record the
+                # abandoned wait in the trace (a silent TimeoutError used
+                # to leave no evidence) and keep the future resolvable:
+                # a later result() call returns normally once the batch
+                # lands
+                self._scheduler._note_result_timeout(self, timeout)
                 raise TimeoutError(
                     f"request {self.seq} not served within {timeout}s")
         if self._error is not None:
@@ -221,7 +227,8 @@ class Scheduler:
                  admission: Optional[AdmissionControl] = None,
                  ladder: Optional[BucketLadder] = None,
                  hedge: bool = True, record_events: bool = True,
-                 sync: bool = True, inbox_capacity: int = 64):
+                 sync: bool = True, inbox_capacity: int = 64,
+                 allow_degraded: bool = False):
         if max_batch_size < 1:
             raise ValueError("max_batch_size must be >= 1")
         self.server = server
@@ -230,6 +237,11 @@ class Scheduler:
         self.admission = admission
         self.ladder = ladder or getattr(server, "bucket_ladder", None) or BucketLadder()
         self.hedge = hedge
+        # serve partial-ensemble responses (knapsack re-solved over the
+        # survivors, tagged degraded=True, settled against the survivors'
+        # full cost) even when ``hedge`` is off; a total outage — every
+        # member unavailable — still raises
+        self.allow_degraded = allow_degraded
         self.record_events = record_events
         self.sync = sync
         self.now = 0
@@ -249,12 +261,13 @@ class Scheduler:
         self._worker: Optional[DispatchWorker] = None
         if not sync:
             self._worker = DispatchWorker(self._serve_batch,
-                                          capacity=inbox_capacity)
+                                          capacity=inbox_capacity,
+                                          on_orphan=self._orphan_batch)
         self.stats = {
             "submitted": 0, "dispatched_batches": 0, "dispatched_requests": 0,
             "shed": 0, "downgraded": 0, "deadline_misses": 0,
             "hedges": 0, "host_hedges": 0, "hedged_requests": 0,
-            "padded_rows": 0,
+            "padded_rows": 0, "result_timeouts": 0, "degraded_responses": 0,
         }
 
     # ------------------------------------------------------------------
@@ -305,6 +318,24 @@ class Scheduler:
             return 0.0
         batches_ahead = len(self._queue) // self.max_batch_size + 1
         return ewma * batches_ahead
+
+    def _note_result_timeout(self, future: ResponseFuture,
+                             timeout: Optional[float]) -> None:
+        """Trace a ``result(timeout=)`` expiring while its batch is still
+        in flight.  Not a shed — the batch will land and a later
+        ``result()`` resolves — but the abandoned wait must be trace
+        evidence, not silence."""
+        with self._lock:
+            self.stats["result_timeouts"] += 1
+        self._event("timeout", req=future.seq, waited_s=timeout)
+
+    def _orphan_batch(self, job: "_BatchJob") -> None:
+        """Resolve a batch the dispatch worker accepted but never ran
+        (it raced past the closed check): same error a losing
+        ``try_submit`` sees, so no accepted future can hang."""
+        exc = RuntimeError("worker is closed")
+        for p in job.batch:
+            p.future._fail(exc)
 
     def _shed(self, future: ResponseFuture, reason: str, detail: str,
               **fields) -> None:
@@ -612,7 +643,8 @@ class Scheduler:
                     responses = self.server.serve_requests(reqs)
                 break
             except MemberFailure as mf:
-                if not self.hedge or len(exclude | masked) + 1 >= pool_n:
+                if (not (self.hedge or self.allow_degraded)
+                        or len(exclude | masked) + 1 >= pool_n):
                     for p in batch:
                         p.future._fail(mf)
                     raise
@@ -628,8 +660,8 @@ class Scheduler:
                 survivors_left = len(exclude | masked | dead) < pool_n
                 # `dead <= masked` means no progress: a host that keeps
                 # failing without newly killing members would retry forever
-                if (not self.hedge or not dead or not survivors_left
-                        or dead <= masked):
+                if (not (self.hedge or self.allow_degraded) or not dead
+                        or not survivors_left or dead <= masked):
                     for p in batch:
                         p.future._fail(hf)
                     raise
@@ -651,6 +683,19 @@ class Scheduler:
                        reqs=[p.seq for p in batch], size=len(batch),
                        bucket=self.ladder.batch_bucket(len(batch)),
                        exclude=sorted(exclude), masked=sorted(masked))
+        n_degraded = sum(1 for r in responses if r.degraded)
+        if self.allow_degraded and n_degraded:
+            # partial-ensemble settlement: the batch served on survivors,
+            # so the rolling ε window charges it against the survivors'
+            # full cost (what the re-targeted budget actually constrained)
+            # rather than a full-pool cost nothing could have spent
+            self._event_to(
+                job.events, tick, "degraded",
+                reqs=[p.seq for p in batch],
+                missing=sorted(set().union(
+                    *(r.missing_members for r in responses))),
+                realized=float(sum(r.realized_cost for r in responses)),
+                survivor_full=float(sum(r.survivor_cost for r in responses)))
         ledger_rows = []
         for p, response in zip(batch, responses):
             missed = (p.deadline_tick is not None and tick > p.deadline_tick)
@@ -658,9 +703,15 @@ class Scheduler:
                 p.future.deadline_missed = True
             p.future._set(response)
             # full-ensemble cost backed out of the realized fraction keeps
-            # the ledger exact for any policy without a second cost pass
-            full = (response.realized_cost / response.cost_fraction
-                    if response.cost_fraction > 0 else 0.0)
+            # the ledger exact for any policy without a second cost pass;
+            # degraded batches settle against the survivors' full cost
+            # instead (gated on allow_degraded so legacy ledgers are
+            # byte-stable)
+            if self.allow_degraded and response.degraded:
+                full = response.survivor_cost
+            else:
+                full = (response.realized_cost / response.cost_fraction
+                        if response.cost_fraction > 0 else 0.0)
             ledger_rows.append((tick, response.realized_cost, full))
             if missed:
                 self._event_to(job.events, tick, "miss", req=p.seq,
@@ -669,6 +720,7 @@ class Scheduler:
                            latency_ticks=tick - p.arrive_tick,
                            missed=missed, text_digest=_digest(response.text))
         with self._lock:
+            self.stats["degraded_responses"] += n_degraded
             self.stats["deadline_misses"] += sum(
                 1 for p in batch if p.future.deadline_missed)
             self.stats["padded_rows"] += (

@@ -44,7 +44,7 @@ import numpy as np
 from repro.data.mixinstruct import Record
 from repro.serve.api import EnsembleRequest, EnsembleResponse
 from repro.serve.backends import FailureInjector
-from repro.serve.cluster import ClusterRouter, PlacementPlan
+from repro.serve.cluster import ClusterRouter, HealthMonitor, PlacementPlan
 from repro.serve.scheduler import Scheduler
 
 DEFAULT_HOSTS = 4  # hosts for scenarios that inject host faults without a count
@@ -134,7 +134,22 @@ class Scenario:
     and ``fanout`` serves a batch's per-host shards concurrently on the
     router's executor pool — all without changing a single output byte
     (fan-out and recovery are routing concerns; the chaos suite pins
-    byte-equivalence against sequential routing per preset)."""
+    byte-equivalence against sequential routing per preset).
+
+    Probe-driven health (``probe_interval`` set) installs a
+    :class:`~repro.serve.cluster.HealthMonitor`: ``host_recoveries``
+    then describes when each host's *underlying* health returns (the
+    monitor revives it through a half-open probe at the next probe
+    tick, no probation schedule involved), ``probe_failures`` is the
+    breaker's consecutive-failure threshold, and ``probe_faults`` maps
+    a host to the probe indices that fail regardless of health — one
+    index is a flaky probe, a threshold-long run is a crash-on-probe
+    kill.  Grey failures: ``slow`` maps a member to the call indices
+    that straggle for ``slow_s`` wall seconds (never changing the
+    logical trace), ``host_stragglers`` maps a host to the grey-slow
+    dispatch indices that ``hedge_stragglers=True`` re-routes to a
+    replica at consume time, and ``shard_deadline_s`` arms the fan-out
+    router's wall-clock shard deadline."""
 
     name: str
     arrivals: ArrivalProcess = ArrivalProcess()
@@ -150,6 +165,14 @@ class Scenario:
     replicas: int = 1
     rebalance: bool = False
     fanout: bool = False
+    probe_interval: Optional[int] = None
+    probe_failures: int = 2
+    probe_faults: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
+    slow: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
+    slow_s: float = 0.0
+    host_stragglers: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
+    hedge_stragglers: bool = False
+    shard_deadline_s: Optional[float] = None
 
 
 def build_arrivals(scenario: Scenario,
@@ -268,8 +291,10 @@ class TrafficSimulator:
         self.scenario = scenario
         self.records = list(records)
         cluster_wired = (scenario.host_failures or scenario.hosts
-                         or scenario.host_recoveries or scenario.fanout)
-        if scenario.failures or cluster_wired:
+                         or scenario.host_recoveries or scenario.fanout
+                         or scenario.probe_interval
+                         or scenario.host_stragglers)
+        if scenario.failures or scenario.slow or cluster_wired:
             # always wrap fresh around the innermost backend: a reused
             # server keeps neither a previous scenario's schedules nor its
             # consumed call/dispatch counters nor its dead hosts, so
@@ -279,23 +304,46 @@ class TrafficSimulator:
                 if isinstance(backend, ClusterRouter):
                     backend.close()  # stop a stale router's executor threads
                 backend = backend.inner
-            if scenario.failures:
+            if scenario.failures or scenario.slow:
                 backend = FailureInjector(
                     backend, failures={m: tuple(calls)
-                                       for m, calls in scenario.failures})
+                                       for m, calls in scenario.failures},
+                    slow={m: tuple(calls) for m, calls in scenario.slow},
+                    slow_s=scenario.slow_s)
             if cluster_wired:
                 plan = PlacementPlan.auto(scheduler.server.pool,
                                           n_hosts=scenario.hosts or DEFAULT_HOSTS,
                                           replicas=scenario.replicas)
+                recovery = {h: tuple(ticks)
+                            for h, ticks in scenario.host_recoveries}
+                health = None
+                if scenario.probe_interval is not None:
+                    # probe-driven health replaces schedule-driven
+                    # revival outright: the recovery ticks feed the
+                    # monitor (when each host's underlying health
+                    # returns), and the router gets no host_recovery
+                    # schedule of its own
+                    health = HealthMonitor(
+                        plan,
+                        probe_interval=scenario.probe_interval,
+                        probe_failures=scenario.probe_failures,
+                        probe_faults={h: tuple(ks)
+                                      for h, ks in scenario.probe_faults},
+                        recovery=recovery)
+                    recovery = {}
                 backend = ClusterRouter(
                     backend, plan=plan,
                     host_failures={h: tuple(calls)
                                    for h, calls in scenario.host_failures},
-                    host_recovery={h: tuple(ticks)
-                                   for h, ticks in scenario.host_recoveries},
+                    host_recovery=recovery,
                     probation_ticks=scenario.probation_ticks,
                     rebalance=scenario.rebalance,
-                    fanout=scenario.fanout)
+                    fanout=scenario.fanout,
+                    health=health,
+                    host_stragglers={h: tuple(ks) for h, ks
+                                     in scenario.host_stragglers},
+                    hedge_stragglers=scenario.hedge_stragglers,
+                    shard_deadline_s=scenario.shard_deadline_s)
             scheduler.server.backend = backend
 
     def run(self, max_idle_ticks: int = 1000) -> TrafficReport:
@@ -432,7 +480,17 @@ def preset_scenarios(n_requests: int = 24, seed: int = 0) -> Dict[str, Scenario]
     over the survivors) fires; ``host-recovery`` additionally declares
     the dead host healthy at tick 4 and re-admits it after a 1-tick
     probation window, so late batches select the revived host's members
-    again (outage → probation → revival); every future still resolves."""
+    again (outage → probation → revival); every future still resolves.
+
+    ``probe-recovery`` is the probe-driven counterpart of
+    ``host-recovery``: the same outage and the same underlying-health
+    return tick, but revival happens through the HealthMonitor's
+    half-open probe at the next probe tick — observed liveness, which
+    beats the schedule+probation path's revival tick.  ``grey-failure``
+    exercises the grey modes together: host 0's dispatches 1–2 straggle
+    and are hedged onto a replica at consume time, while a flaky probe
+    on host 2 fails once (below the breaker threshold — trace-visible,
+    no death)."""
     return {
         "steady": Scenario(
             name="steady",
@@ -488,5 +546,22 @@ def preset_scenarios(n_requests: int = 24, seed: int = 0) -> Dict[str, Scenario]
             n_requests=n_requests, seed=seed, deadline_ticks=4,
             hosts=4, host_failures=((0, (1,)),),
             host_recoveries=((0, (4,)),), probation_ticks=1,
+        ),
+        "probe-recovery": Scenario(
+            name="probe-recovery",
+            arrivals=ArrivalProcess("steady", rate=2.0),
+            n_requests=n_requests, seed=seed, deadline_ticks=4,
+            hosts=4, host_failures=((0, (1,)),),
+            host_recoveries=((0, (4,)),),
+            probe_interval=2, probe_failures=1,
+        ),
+        "grey-failure": Scenario(
+            name="grey-failure",
+            arrivals=ArrivalProcess("steady", rate=2.0),
+            n_requests=n_requests, seed=seed, deadline_ticks=4,
+            hosts=4, replicas=2,
+            host_stragglers=((0, (1, 2)),), hedge_stragglers=True,
+            probe_interval=3, probe_failures=2,
+            probe_faults=((2, (1,)),),
         ),
     }

@@ -30,10 +30,25 @@ suites:
 * **pre-mask snapshot stability** — the per-batch dead-member snapshot
   (taken at dispatch time on the serving thread) keeps async traces
   byte-identical to sync even when a death lands while later batches
-  are already queued.
+  are already queued;
+* **probe-driven health** — the ``probe-recovery`` golden trace (a
+  half-open probe revives the dispatch-observed death strictly earlier
+  than the schedule+probation path), a crash-on-probe kill that strands
+  members *without* any dispatch ever exploding, and the exponential
+  half-open backoff window;
+* **grey failures** — the ``grey-failure`` straggler hedge is
+  byte-invisible (sequential == fan-out, outputs == offline), and a
+  *wall-clock* straggler host under ``shard_deadline_s`` is cancelled
+  and hedged onto a replica with baseline bytes;
+* **graceful degradation** — ``allow_degraded=True`` serves partial
+  ensembles through an outage with hedging off: knapsack re-solved over
+  survivors, responses tagged with the missing members, and the
+  ``degraded`` settlement events matching a hand-computed
+  survivor-cost sum.
 """
 
 import dataclasses
+import time
 
 import jax
 import numpy as np
@@ -43,7 +58,7 @@ from hypothesis import strategies as st
 
 from repro import configs
 from repro.core import build_predictor, make_policy
-from repro.data import DEFAULT_POOL, generate_dataset
+from repro.data import DEFAULT_POOL, generate_dataset, query_cost_matrix
 from repro.models import build_model
 from repro.serve import (
     ArrivalProcess,
@@ -55,7 +70,9 @@ from repro.serve import (
     Scenario,
     Scheduler,
     TrafficSimulator,
+    current_dispatch_host,
     preset_scenarios,
+    requests_from_records,
 )
 
 pytestmark = [pytest.mark.chaos]
@@ -483,6 +500,239 @@ def test_async_result_after_close_resolves_under_fanout(stack):
             f2.result(timeout=5.0)
     finally:
         router.close()
+
+
+# ---------------------------------------------------------------------------
+# Probe-driven health: golden traces and probe-vs-schedule revival
+# ---------------------------------------------------------------------------
+
+
+def test_probe_recovery_golden_trace(stack):
+    """Host 0 dies at its dispatch 1 (tick 3, members [1, 7] hedged);
+    the HealthMonitor adopts the dispatch-observed death and its
+    half-open probe at the next probe tick (4) finds the underlying
+    health returned → revives immediately.  The tick-5 dispatch is
+    already unmasked — no probation schedule in the loop."""
+    scenario = preset_scenarios(n_requests=16)["probe-recovery"]
+    sched = _sched(stack)
+    report = _run(sched, scenario)
+    assert report.served == report.n == 16
+    router = sched.server.backend
+    assert isinstance(router, ClusterRouter)
+    assert router.stats["probes"] == 16
+    assert router.stats["probe_revivals"] == 1
+    assert router.stats["revivals"] == 1  # probe revival counts as revival
+
+    structural = [e for e in report.trace
+                  if e["event"] in ("host_hedge", "probe_death",
+                                    "probe_revive", "revive")]
+    assert structural == [
+        {"tick": 3, "event": "host_hedge", "host": 0, "members": [1, 7],
+         "reqs": [4, 5, 6, 7], "masked": [1, 7]},
+        {"tick": 4, "event": "probe_revive", "host": 0, "recovered": [1, 7],
+         "after_probes": 2},
+    ]
+    masked = [(e["tick"], e["masked"]) for e in report.trace
+              if e["event"] == "dispatch"]
+    assert masked == [(1, []), (3, [1, 7]), (5, []), (7, [])]
+    # the adopted death is immediately probe-eligible: exactly one
+    # half-open probe, and it succeeds
+    half_open = [e for e in report.trace
+                 if e["event"] == "probe" and e["half_open"]]
+    assert half_open == [{"tick": 4, "event": "probe", "host": 0, "probe": 1,
+                          "ok": True, "half_open": True}]
+    # post-revival responses equal the plain offline path (no masking)
+    post = list(range(8, 16))
+    offline = _server(stack, budget=0.2).serve_requests(
+        [report.requests[i] for i in post])
+    assert [report.responses[i].text for i in post] == [r.text for r in offline]
+
+
+def test_probe_revival_beats_schedule_revival(stack):
+    """Identical outage and identical underlying-health return tick (4):
+    the schedule+probation path revives at tick 5 (gap 2), the probe
+    path at tick 4 (gap 1) — observed liveness is strictly faster."""
+    probe_rep = _run(_sched(stack),
+                     preset_scenarios(n_requests=16)["probe-recovery"])
+    sched_rep = _run(_sched(stack),
+                     preset_scenarios(n_requests=16)["host-recovery"])
+
+    def gap(report, revive_event):
+        hedge = next(e["tick"] for e in report.trace
+                     if e["event"] == "host_hedge")
+        revive = next(e["tick"] for e in report.trace
+                      if e["event"] == revive_event)
+        return revive - hedge
+
+    probe_gap = gap(probe_rep, "probe_revive")
+    schedule_gap = gap(sched_rep, "revive")
+    assert probe_gap == 1 and schedule_gap == 2
+    assert probe_gap < schedule_gap
+
+
+CRASH_PROBE = Scenario(
+    name="crash-on-probe",
+    arrivals=ArrivalProcess("steady", rate=2.0),
+    n_requests=16, seed=0, deadline_ticks=4, hosts=4,
+    probe_interval=1, probe_failures=2,
+    probe_faults=((0, tuple(range(12))),),
+)
+
+
+def test_crash_on_probe_kills_host_without_dispatch_explosion(stack):
+    """Every probe to host 0 fails: the breaker opens at the second
+    consecutive failure (tick 2) and strands [1, 7] — with NO
+    host_hedge anywhere, because no dispatch ever hit the dead host.
+    Later dispatches pre-mask the stranded members, and the failed
+    half-open probes back off exponentially (ticks 3, 4, 6 with the
+    default backoff 1 → 2 → 4)."""
+    sched = _sched(stack)
+    report = _run(sched, CRASH_PROBE)
+    assert report.served == report.n == 16
+    assert not any(e["event"] == "host_hedge" for e in report.trace)
+    assert report.stats["host_hedges"] == 0
+
+    deaths = [e for e in report.trace if e["event"] == "probe_death"]
+    assert deaths == [{"tick": 2, "event": "probe_death", "host": 0,
+                       "failures": 2, "stranded": [1, 7]}]
+    masked = [(e["tick"], e["masked"]) for e in report.trace
+              if e["event"] == "dispatch"]
+    assert masked == [(1, []), (3, [1, 7]), (5, [1, 7]), (7, [1, 7])]
+    half_open = [(e["tick"], e["ok"]) for e in report.trace
+                 if e["event"] == "probe" and e["half_open"]]
+    assert half_open == [(3, False), (4, False), (6, False)]
+
+    # post-death responses equal the offline path with [1, 7] masked
+    post = list(range(4, 16))
+    offline = _server(stack, budget=0.2).serve_requests(
+        [report.requests[i] for i in post], masked_members=frozenset({1, 7}))
+    assert [report.responses[i].text for i in post] == [r.text for r in offline]
+
+
+# ---------------------------------------------------------------------------
+# Grey failures: straggler hedging (logical and wall-clock)
+# ---------------------------------------------------------------------------
+
+
+def test_grey_failure_straggler_hedge_is_byte_invisible(stack):
+    """The grey-failure preset: host 0's dispatches 1-2 straggle and are
+    re-routed to a replica at consume time.  The hedge fires identically
+    under sequential and fan-out routing, the flaky probe on host 2
+    stays below the breaker threshold, and not one output byte moves
+    against the unrouted offline path."""
+    base = preset_scenarios(n_requests=16)["grey-failure"]
+    reports, routers = {}, {}
+    for fanout in (False, True):
+        sched = _sched(stack)
+        reports[fanout] = _run(sched, dataclasses.replace(base, fanout=fanout))
+        routers[fanout] = sched.server.backend
+    seq, fan = reports[False], reports[True]
+    assert fan.trace == seq.trace
+    assert fan.stats == seq.stats
+    assert _texts(fan) == _texts(seq)
+    assert (routers[False].stats["straggler_hedges"]
+            == routers[True].stats["straggler_hedges"]) and \
+        routers[False].stats["straggler_hedges"] > 0
+    flaky = [e for e in seq.trace if e["event"] == "probe" and not e["ok"]]
+    assert [(e["host"], e["probe"]) for e in flaky] == [(2, 1)]
+    assert not any(e["event"] == "probe_death" for e in seq.trace)
+    offline = _server(stack, budget=0.2).serve_requests(seq.requests)
+    assert _texts(seq) == [r.text for r in offline]
+
+
+class _HostStraggler:
+    """Wall-clock-only grey host: calls executing on ``slow_host`` sleep
+    before generating (keyed on ``current_dispatch_host()``, which the
+    router sets around every inner generate).  Outputs and the logical
+    trace are untouched — only the shard's wall time."""
+
+    def __init__(self, inner, slow_host, slow_s):
+        self.inner, self.slow_host, self.slow_s = inner, slow_host, slow_s
+
+    def num_members(self):
+        return self.inner.num_members()
+
+    def generate(self, j, records, caps):
+        if current_dispatch_host() == self.slow_host:
+            time.sleep(self.slow_s)
+        return self.inner.generate(j, records, caps)
+
+
+def test_shard_deadline_hedges_real_straggler_to_replica(stack):
+    """fanout + replicas=2 + a wall-clock straggler host: the fan-out
+    join times out on the late shard, cancels its future, and re-runs
+    its unfinished orders on a replica host (earliest completion wins).
+    The straggler is grey, not dead — no fault, no mask — and the
+    caller sees baseline bytes."""
+    server = _server(stack, policy="llm-blender")
+    plan = PlacementPlan.auto(DEFAULT_POOL, n_hosts=4, replicas=2)
+    router = ClusterRouter(_HostStraggler(server.backend, 0, 0.25),
+                           plan=plan, fanout=True, shard_deadline_s=0.05)
+    server.backend = router
+    try:
+        reqs = requests_from_records(RECORDS[:4])
+        out = server.serve_requests(reqs)
+        assert router.stats["shard_hedges"] >= 1
+        assert router.plan.dead_hosts == set()
+        assert router.stats["host_faults"] == 0
+        baseline = _server(stack, policy="llm-blender").serve_requests(reqs)
+        assert [r.text for r in out] == [r.text for r in baseline]
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: partial ensembles with hedging off
+# ---------------------------------------------------------------------------
+
+
+def test_degraded_partial_ensemble_golden_settlement(stack):
+    """hedge=False + allow_degraded=True through the host-outage preset:
+    the fault batch and everything after serve as partial ensembles —
+    knapsack re-solved over the survivors, responses tagged with the
+    missing members — and every ``degraded`` settlement event's sums are
+    hand-computable from the responses and the cost matrix."""
+    scenario = preset_scenarios(n_requests=12)["host-outage"]
+    sched = _sched(stack, hedge=False, allow_degraded=True)
+    report = _run(sched, scenario)
+    assert report.served == report.n == 12
+    assert sched.stats["degraded_responses"] == 8
+
+    degraded_idx = [i for i, r in enumerate(report.responses) if r.degraded]
+    assert degraded_idx == list(range(4, 12))
+    for i in degraded_idx:
+        r = report.responses[i]
+        assert r.missing_members == (1, 7)
+        assert not r.mask[[1, 7]].any()
+    for i in range(4):  # pre-fault responses are full-ensemble
+        assert not report.responses[i].degraded
+        assert report.responses[i].missing_members == ()
+
+    # outputs equal the offline path with the dead members masked
+    offline = _server(stack, budget=0.2).serve_requests(
+        [report.requests[i] for i in degraded_idx],
+        masked_members=frozenset({1, 7}))
+    assert ([report.responses[i].text for i in degraded_idx]
+            == [r.text for r in offline])
+
+    # survivor-cost settlement is hand-computable: each degraded
+    # response's survivor_cost is the cost-matrix sum over the alive
+    # columns, and each settlement event sums its batch exactly
+    costs = query_cost_matrix(
+        DEFAULT_POOL,
+        [report.requests[i].resolve_record() for i in degraded_idx])
+    alive = [j for j in range(N_POOL) if j not in (1, 7)]
+    for row, i in enumerate(degraded_idx):
+        assert report.responses[i].survivor_cost == pytest.approx(
+            float(costs[row, alive].sum()), rel=1e-6)
+    degraded_evs = [e for e in report.trace if e["event"] == "degraded"]
+    assert [(e["tick"], e["reqs"], e["missing"]) for e in degraded_evs] == [
+        (3, [4, 5, 6, 7], [1, 7]), (5, [8, 9, 10, 11], [1, 7])]
+    for ev in degraded_evs:
+        assert ev["realized"] == pytest.approx(sum(
+            report.responses[i].realized_cost for i in ev["reqs"]))
+        assert ev["survivor_full"] == pytest.approx(sum(
+            report.responses[i].survivor_cost for i in ev["reqs"]))
 
 
 # ---------------------------------------------------------------------------

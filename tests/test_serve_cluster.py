@@ -24,6 +24,7 @@ Pinned properties:
 
 import dataclasses
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -38,10 +39,13 @@ from repro.data import DEFAULT_POOL, generate_dataset, query_cost_matrix
 from repro.models import build_model
 from repro.serve import (
     AdmissionControl,
+    CancelledShard,
     ClusterRouter,
     DispatchWorker,
     EnsembleRequest,
     EnsembleServer,
+    HealthMonitor,
+    HostExecutorPool,
     HostFailure,
     InboxFull,
     PlacementPlan,
@@ -221,6 +225,151 @@ def test_dispatch_worker_backpressure():
     finally:
         release.set()
         w.close()
+
+
+# ---------------------------------------------------------------------------
+# Worker lifecycle: submit/close races, executor pool, shard cancellation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_try_submit_vs_close_interleaving_never_strands_jobs(seed):
+    """Race ``try_submit`` against ``close()`` under random
+    interleavings: a job the worker ACCEPTED (try_submit returned
+    without raising) must always end up either processed or handed to
+    ``on_orphan`` — never silently dropped into a closed inbox, never a
+    hung future — and submits after close fail loudly."""
+    rng = np.random.default_rng(seed)
+    pre_delays = rng.random(8) * 1e-3
+    close_delay = float(rng.random()) * 2e-3
+    served, orphans, accepted = [], [], []
+    w = DispatchWorker(served.append, capacity=4, on_orphan=orphans.append)
+    start = threading.Barrier(2)
+
+    def produce():
+        start.wait()
+        for i, d in enumerate(pre_delays):
+            try:
+                w.try_submit(i)
+            except (InboxFull, RuntimeError):
+                continue  # backpressure or closed: the caller was told
+            accepted.append(i)
+            time.sleep(d)
+
+    t = threading.Thread(target=produce)
+    t.start()
+    start.wait()
+    time.sleep(close_delay)
+    w.close()
+    t.join(5.0)
+    assert not t.is_alive()
+    # every accepted job is accounted for exactly once
+    assert sorted(served + orphans) == sorted(accepted)
+    assert w.orphaned == len(orphans)
+    with pytest.raises(RuntimeError, match="closed"):
+        w.submit("late")
+    with pytest.raises(RuntimeError, match="closed"):
+        w.try_submit("late")
+
+
+def test_host_executor_pool_close_is_idempotent_and_final():
+    pool = HostExecutorPool(capacity=2)
+    f = pool.submit(0, lambda: 41 + 1)
+    assert f.result(timeout=5.0) == 42
+    assert pool.spawned == 1
+    pool.close()
+    pool.close()  # idempotent: second close is a no-op, not an error
+    assert pool.closed
+    # a post-close submit must refuse loudly instead of lazily respawning
+    # an executor thread nothing will ever join
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.submit(0, lambda: None)
+    assert pool.spawned == 1  # the rejected submit respawned nothing
+    assert pool.live_hosts() == []
+
+
+def test_shard_future_cancellation_semantics():
+    pool = HostExecutorPool(capacity=4)
+    try:
+        release = threading.Event()
+        blocker = pool.submit(0, lambda: (release.wait(10.0), "first")[1])
+        queued = pool.submit(0, lambda: "ran")
+        assert queued.cancel()  # still queued behind the blocker
+        assert queued.cancelled()
+        release.set()
+        with pytest.raises(CancelledShard):
+            queued.result(timeout=5.0)
+        assert blocker.result(timeout=5.0) == "first"
+        assert not blocker.cancel()  # already resolved: cancel refuses
+    finally:
+        pool.close()
+
+
+def test_result_timeout_records_event_and_stays_resolvable(stack):
+    """result(timeout=) expiring while the batch is in flight raises
+    TimeoutError, leaves a "timeout" trace event (an abandoned wait used
+    to be silent), and keeps the future resolvable: a later result()
+    returns normally once the batch lands."""
+    sched = _sched(stack, sync=False, max_batch_size=2, max_wait_ticks=10)
+    release = threading.Event()
+    try:
+        inner = sched.server.backend
+        orig = inner.generate
+
+        def slow_generate(j, records, caps):
+            release.wait(10.0)
+            return orig(j, records, caps)
+
+        inner.generate = slow_generate
+        futs = [sched.submit(EnsembleRequest(query=r.query, record=r))
+                for r in RECORDS[:2]]
+        with pytest.raises(TimeoutError, match="not served within"):
+            futs[0].result(timeout=0.05)
+        timeouts = [e for e in sched.events if e["event"] == "timeout"]
+        assert len(timeouts) == 1
+        assert timeouts[0]["req"] == 0 and timeouts[0]["waited_s"] == 0.05
+        assert sched.stats["result_timeouts"] == 1
+        release.set()
+        sched.join()
+        assert futs[0].result(timeout=5.0).text  # still resolvable
+        assert futs[1].result(timeout=5.0).text
+    finally:
+        release.set()
+        sched.close()
+
+
+def test_health_monitor_backoff_probation_and_flaky_probe():
+    """Breaker mechanics in isolation: two consecutive probe failures
+    open host 0 (members stranded), failed half-open probes back off
+    exponentially (2 → 4 → capped 4), and the first clean probe after
+    the underlying health returns revives it.  A single flaky probe on
+    host 1 stays under the threshold and never opens anything."""
+    plan = PlacementPlan.round_robin(N_POOL, 2)
+    hm = HealthMonitor(plan, probe_interval=1, probe_failures=2,
+                       probe_faults={0: (0, 1, 2, 3, 4), 1: (2,)},
+                       recovery={0: (1,)}, backoff_ticks=2, backoff_cap=4)
+    trace = []
+    for now in range(1, 15):
+        trace.extend((now, ev) for ev in hm.run_probes(now))
+
+    deaths = [(t, e) for t, e in trace if e["event"] == "probe_death"]
+    assert deaths == [(2, {"event": "probe_death", "host": 0, "failures": 2,
+                           "stranded": [0, 2, 4, 6]})]
+    half_open = [(t, e["ok"]) for t, e in trace
+                 if e["event"] == "probe" and e["half_open"]]
+    assert half_open == [(4, False), (6, False), (10, False), (14, True)]
+    revives = [(t, e) for t, e in trace if e["event"] == "probe_revive"]
+    assert revives == [(14, {"event": "probe_revive", "host": 0,
+                             "recovered": [0, 2, 4, 6], "after_probes": 6})]
+    assert plan.dead_hosts == set()
+    assert hm.state(0) == "closed"
+    # host 1's isolated flaky probe: trace-visible, below threshold
+    flaky = [(t, e["probe"]) for t, e in trace
+             if e.get("host") == 1 and e["event"] == "probe" and not e["ok"]]
+    assert flaky == [(3, 2)]
+    assert not any(e["event"] == "probe_death" and e["host"] == 1
+                   for _, e in trace)
 
 
 # ---------------------------------------------------------------------------
