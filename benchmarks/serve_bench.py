@@ -6,7 +6,11 @@ Two modes, both writing ``BENCH_serve.json`` so the perf trajectory
 accumulates per PR:
 
 * default — the micro-batch latency probe from PR 2
-  (first/steady-state batch latency, compile counters);
+  (first/steady-state batch latency, compile counters), plus a streaming
+  probe through the persistent in-flight decode state reporting
+  ``ttft_ms`` (median time-to-first-token) against the batch-boundary
+  baseline, ``decode_step_p99_ms``, and the steady-state
+  ``generate_compiles`` gate (must stay 0);
 * ``--scenario steady|bursty|heavy-tail|failure`` — drive the
   deterministic traffic simulator (:mod:`repro.serve.traffic`) through
   the deadline-aware Scheduler and report p50/p99 request latency,
@@ -69,6 +73,38 @@ def run(n_batches: int = 8, batch_size: int = 4, budget: float = 0.2,
             f"compiles={server.generate_compiles()['total']}")
 
     steady = float(np.median(per_batch_s[1:])) if n_batches > 1 else per_batch_s[0]
+
+    # --- streaming probe: token-level continuous batching through the
+    # persistent in-flight decode state.  TTFT is wall time from batch
+    # service start to a request's first fused token; the batch-boundary
+    # baseline only surfaces its first token when the whole batch settles,
+    # so its TTFT *is* the steady-state batch latency measured above.
+    stream_server = _build_server(budget)
+    stream_sched = Scheduler(stream_server, max_batch_size=batch_size,
+                             stream=True, stream_capacity=batch_size)
+    fuser = stream_server.stream_fuser(capacity=batch_size)
+    ladder = stream_server.bucket_ladder
+    fuser.warm(sorted({ladder.batch_bucket(b)
+                       for b in range(1, batch_size + 1)}))
+    compiles_after_warm = stream_server.generate_compiles()["total"]
+    n_warm_steps = len(fuser.step_wall_s)
+    ttft_s = []
+    for k in range(n_batches):
+        reqs = requests_from_records(records[k * batch_size:(k + 1) * batch_size])
+        futures = [stream_sched.submit(r) for r in reqs]
+        stream_sched.flush()
+        for f in futures:
+            f.result()
+        ttft_s.extend(f.ttft_s for f in futures if f.ttft_s is not None)
+    step_walls = fuser.step_wall_s[n_warm_steps:]
+    ttft_ms = float(np.median(ttft_s)) * 1e3 if ttft_s else 0.0
+    decode_step_p99_ms = (float(np.percentile(step_walls, 99)) * 1e3
+                          if step_walls else 0.0)
+    # steady-state recompiles on the streaming path — the continuous-batch
+    # acceptance gate (CI fails on > 0)
+    stream_compiles = (stream_server.generate_compiles()["total"]
+                       - compiles_after_warm)
+
     result = {
         "batch_size": batch_size,
         "n_batches": n_batches,
@@ -81,19 +117,32 @@ def run(n_batches: int = 8, batch_size: int = 4, budget: float = 0.2,
         "compiles_final": server.generate_compiles()["total"],
         "fuser_buckets": [list(b) for b in server.fuser_dispatch.buckets]
         if server.fuser_dispatch else [],
+        "ttft_ms": ttft_ms,
+        "ttft_batch_boundary_ms": steady * 1e3,
+        "ttft_speedup": (steady * 1e3) / max(ttft_ms, 1e-9),
+        "decode_step_p99_ms": decode_step_p99_ms,
+        "decode_steps": len(step_walls),
+        "generate_compiles": stream_compiles,
+        "stream_tokens": stream_sched.stats["stream_tokens"],
         "backend": "sim",
     }
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     log(f"wrote {out_path}: first={result['first_batch_s']*1e3:.1f}ms "
         f"steady={steady*1e3:.1f}ms speedup={result['speedup']:.1f}x "
-        f"recompiles_after_warm={result['compiles_final'] - compiles_after_first}")
+        f"recompiles_after_warm={result['compiles_final'] - compiles_after_first} "
+        f"ttft={ttft_ms:.1f}ms (batch-boundary {steady*1e3:.1f}ms) "
+        f"step_p99={decode_step_p99_ms:.2f}ms stream_recompiles={stream_compiles}")
     rows = [
         ("serve_first_batch", result["first_batch_s"] * 1e6,
          f"compile-inclusive b={batch_size}"),
         ("serve_steady_batch", steady * 1e6,
          f"speedup={result['speedup']:.1f}x "
          f"recompiles={result['compiles_final'] - compiles_after_first}"),
+        ("serve_stream_ttft", ttft_ms * 1e3,
+         f"vs batch-boundary {steady*1e3:.1f}ms "
+         f"step_p99={decode_step_p99_ms:.2f}ms "
+         f"stream_recompiles={stream_compiles}"),
     ]
     return rows
 

@@ -179,6 +179,16 @@ def main():
     ap.add_argument("--async", dest="async_dispatch", action="store_true",
                     help="serve batches on a dispatch worker thread so "
                          "submit never blocks on a batch (--online only)")
+    ap.add_argument("--stream", action="store_true",
+                    help="token-level continuous batching: fuse through "
+                         "the persistent in-flight decode state and print "
+                         "tokens as they stream (--online only; final "
+                         "responses are byte-identical)")
+    ap.add_argument("--stream-capacity", type=int, default=8,
+                    help="decode slots in the persistent in-flight batch")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="max rows per prefill call on the streaming path "
+                         "(bounds how long a prompt burst can stall joins)")
     args = ap.parse_args()
 
     recs, scorer, scorer_p, fuser, fuser_p, predictor, pred_p = build_stack(
@@ -247,7 +257,10 @@ def main():
                               max_wait_ticks=args.max_wait_ticks,
                               admission=admission,
                               sync=not args.async_dispatch,
-                              allow_degraded=args.allow_degraded)
+                              allow_degraded=args.allow_degraded,
+                              stream=args.stream,
+                              stream_capacity=args.stream_capacity,
+                              prefill_chunk=args.prefill_chunk)
         futures = [
             scheduler.submit(req)
             for req in requests_from_records(
@@ -259,7 +272,17 @@ def main():
         out = []
         for f in futures:
             try:
-                out.append(f.result())
+                if args.stream:
+                    resp = None
+                    for ev in f.stream():
+                        if ev.final:
+                            resp = ev.response
+                        else:
+                            print(f"  [req {ev.seq} +{len(ev.tokens)} tok] "
+                                  f"{ev.text!r}")
+                    out.append(resp)
+                else:
+                    out.append(f.result())
             except RequestShed:
                 out.append(None)
         scheduler.close()

@@ -83,6 +83,27 @@ class EnsembleResponse:
     survivor_cost: float = 0.0  # full cost over servable members only
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One increment of a streamed response (see ``ResponseFuture.stream``).
+
+    ``tokens`` is every fused token emitted so far — cumulative, so a
+    consumer can always rebuild its display from the latest event alone.
+    ``text`` is the *stable* decoded prefix: the byte stream cut at the
+    last complete UTF-8 sequence, so it is guaranteed to be a string
+    prefix of the final fused text (a mid-character cut would otherwise
+    decode to a replacement char the final text doesn't contain).  The
+    closing event has ``final=True`` and carries the settled
+    :class:`EnsembleResponse`; its ``text`` is exactly
+    ``response.text``."""
+
+    seq: int  # the request's arrival sequence number (trace id)
+    tokens: Tuple[int, ...]  # fused tokens emitted so far (cumulative)
+    text: str  # stable decoded prefix of the final text
+    final: bool = False
+    response: Optional[EnsembleResponse] = None  # set on the final event
+
+
 def requests_from_records(records: List[Record], **overrides) -> List[EnsembleRequest]:
     """Wrap evaluation Records as requests (shared kwargs apply to all)."""
     return [EnsembleRequest(query=r.query, record=r, **overrides) for r in records]

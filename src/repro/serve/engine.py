@@ -54,8 +54,33 @@ from repro.serve.backends import (
     MemberFailure,
     SimBackend,
 )
-from repro.serve.dispatch import BucketLadder, EncDecGenerateDispatcher
+from repro.serve.dispatch import (
+    BucketLadder,
+    EncDecGenerateDispatcher,
+    StreamingEncDecBatcher,
+)
 from repro.serve.generate import greedy_generate_encdec
+
+
+@dataclasses.dataclass
+class _BatchPlan:
+    """Everything ``serve_requests`` computes before fusion, so the batch
+    and streaming paths share one pre-fusion pipeline (predict → select →
+    member generation) and one settlement path, and can only diverge in
+    *how* fusion tokens are produced — never in what they are."""
+
+    records: List[Record]
+    queries: List[str]
+    r_hat: np.ndarray  # [B, N]
+    costs: np.ndarray  # [B, N]
+    mask: np.ndarray  # [B, N]
+    policy_names: List[str]
+    dropped: frozenset
+    max_new_per_row: List[int]
+    member_out: List[List[Optional[str]]]
+    predict_s: float
+    select_s: float
+    generate_s: float
 
 
 @dataclasses.dataclass
@@ -121,6 +146,8 @@ class EnsembleServer:
             EncDecGenerateDispatcher(fuser, fuser_params, ladder=ladder)
             if fast_generate else None
         )
+        # lazily-built continuous-batching fuser for the streaming path
+        self._stream_fuser: Optional[StreamingEncDecBatcher] = None
         if warm_shapes:
             self.warm(warm_shapes)
         self.stats: Dict[str, float] = {
@@ -148,7 +175,9 @@ class EnsembleServer:
         fuser = self.fuser_dispatch.compiles if self.fuser_dispatch else 0
         backend_compiles = getattr(self.backend, "compiles", None)
         members = backend_compiles() if callable(backend_compiles) else 0
-        return {"fuser": fuser, "members": members, "total": fuser + members}
+        stream = self._stream_fuser.compiles if self._stream_fuser else 0
+        return {"fuser": fuser, "members": members, "stream": stream,
+                "total": fuser + members + stream}
 
     # ------------------------------------------------------------------
     def predict_quality(self, queries: List[str]) -> np.ndarray:
@@ -309,8 +338,12 @@ class EnsembleServer:
             mask[np.flatnonzero(empty), cheapest[empty]] = True
         return mask
 
-    def _fuse(self, queries: List[str], member_out: List[List[Optional[str]]],
-              mask: np.ndarray, max_new: int) -> np.ndarray:
+    def _fusion_inputs(self, queries: List[str],
+                       member_out: List[List[Optional[str]]],
+                       mask: np.ndarray, max_new: int) -> np.ndarray:
+        """Encoder tokens [B, max_fusion_len] for the GEN-FUSER — shared by
+        the batch-boundary and streaming fusion paths, so both decode the
+        very same prompt."""
         b, n = mask.shape
         # member texts are pre-truncated to their row's max_new cap; the
         # fusion-side cap only narrows further if explicitly configured
@@ -331,10 +364,14 @@ class EnsembleServer:
                 [TOKENIZER.encode(f[2]) for f in flat], cap
             )
         q_tokens = TOKENIZER.batch_encode(queries, self.max_query_len)
-        fuse_in = build_fusion_batch(
+        return build_fusion_batch(
             q_tokens, resp_tokens, mask, TOKENIZER.sep_id, self.max_fusion_len,
             TOKENIZER.pad_id,
         )
+
+    def _fuse(self, queries: List[str], member_out: List[List[Optional[str]]],
+              mask: np.ndarray, max_new: int) -> np.ndarray:
+        fuse_in = self._fusion_inputs(queries, member_out, mask, max_new)
         if self.fuser_dispatch is not None:
             return self.fuser_dispatch(fuse_in, max_new)
         return greedy_generate_encdec(
@@ -362,6 +399,22 @@ class EnsembleServer:
         if not requests:
             return []
         t_start = time.perf_counter()
+        plan = self._plan_batch(requests, exclude_members, masked_members)
+
+        max_new = max(plan.max_new_per_row)
+        t0 = time.perf_counter()
+        fused = self._fuse(plan.queries, plan.member_out, plan.mask, max_new)
+        t_fuse = time.perf_counter() - t0
+
+        row_tokens = [fused[i, :plan.max_new_per_row[i]]
+                      for i in range(len(requests))]
+        return self._settle(plan, row_tokens, t_start, t_fuse)
+
+    def _plan_batch(self, requests: List[EnsembleRequest],
+                    exclude_members: frozenset,
+                    masked_members: frozenset) -> _BatchPlan:
+        """Pre-fusion pipeline (predict → select → member generation),
+        shared verbatim by the batch-boundary and streaming paths."""
         records = [req.resolve_record() for req in requests]
         queries = [r.query for r in records]
 
@@ -386,12 +439,19 @@ class EnsembleServer:
         t0 = time.perf_counter()
         member_out = self._generate_members(records, mask, max_new_per_row)
         t_generate = time.perf_counter() - t0
+        return _BatchPlan(
+            records=records, queries=queries, r_hat=r_hat, costs=costs,
+            mask=mask, policy_names=policy_names, dropped=dropped,
+            max_new_per_row=max_new_per_row, member_out=member_out,
+            predict_s=t_predict, select_s=t_select, generate_s=t_generate,
+        )
 
-        max_new = max(max_new_per_row)
-        t0 = time.perf_counter()
-        fused = self._fuse(queries, member_out, mask, max_new)
-        t_fuse = time.perf_counter() - t0
-
+    def _settle(self, plan: _BatchPlan, row_tokens: Sequence,
+                t_start: float, t_fuse: float) -> List[EnsembleResponse]:
+        """Cost accounting + response assembly over per-row fused tokens
+        (a ``[row_new]`` slice from the batch path, or the exact emitted
+        sequence from the streaming path — both decode to the same text)."""
+        mask, costs, dropped = plan.mask, plan.costs, plan.dropped
         frac = np.asarray(realized_cost_fraction(jnp.asarray(mask), jnp.asarray(costs)))
         realized = np.sum(np.where(mask, costs, 0.0), axis=1)
         # full-ensemble cost over the servable members only — the base a
@@ -400,32 +460,106 @@ class EnsembleServer:
         survivor_cost = np.sum(np.where(servable, costs, 0.0), axis=1)
         total = time.perf_counter() - t_start
         timing = {
-            "predict_s": t_predict, "select_s": t_select,
-            "generate_s": t_generate, "fuse_s": t_fuse, "total_s": total,
+            "predict_s": plan.predict_s, "select_s": plan.select_s,
+            "generate_s": plan.generate_s, "fuse_s": t_fuse, "total_s": total,
         }
 
-        self.stats["queries"] += len(requests)
+        self.stats["queries"] += len(plan.records)
         self.stats["batches"] += 1
         self.stats["flops"] += float(realized.sum())
         self.stats["full_flops"] += float(np.sum(costs))
 
         responses = []
-        for i, req in enumerate(requests):
-            row_new = max_new_per_row[i]
+        for i in range(len(plan.records)):
             responses.append(EnsembleResponse(
-                text=TOKENIZER.decode(fused[i, :row_new]),
-                member_texts=member_out[i],
+                text=TOKENIZER.decode(row_tokens[i]),
+                member_texts=plan.member_out[i],
                 mask=mask[i],
                 realized_cost=float(realized[i]),
                 cost_fraction=float(frac[i]),
-                predicted_quality=r_hat[i],
-                policy_name=policy_names[i],
+                predicted_quality=plan.r_hat[i],
+                policy_name=plan.policy_names[i],
                 timing=dict(timing),
                 degraded=bool(dropped),
                 missing_members=tuple(sorted(dropped)),
                 survivor_cost=float(survivor_cost[i]),
             ))
         return responses
+
+    # ------------------------------------------------------------------
+    def stream_fuser(self, capacity: int = 8,
+                     prefill_chunk: Optional[int] = None,
+                     ) -> StreamingEncDecBatcher:
+        """The continuous-batching fuser, built on first use.  ``capacity``
+        and ``prefill_chunk`` only apply to that first construction — the
+        in-flight state is persistent, so later callers share it."""
+        if self._stream_fuser is None:
+            self._stream_fuser = StreamingEncDecBatcher(
+                self.fuser, self.fuser_params, enc_seq=self.max_fusion_len,
+                capacity=capacity, ladder=self.bucket_ladder,
+                prefill_chunk=prefill_chunk,
+            )
+        return self._stream_fuser
+
+    def serve_requests_stream(
+        self,
+        requests: List[EnsembleRequest],
+        on_token=None,
+        exclude_members: frozenset = frozenset(),
+        masked_members: frozenset = frozenset(),
+        capacity: int = 8,
+        prefill_chunk: Optional[int] = None,
+    ) -> List[EnsembleResponse]:
+        """:meth:`serve_requests` with token-level continuous fusion: the
+        GEN-FUSER decodes through the persistent :meth:`stream_fuser`
+        batch, firing ``on_token(i, tokens_so_far)`` after every decode
+        step of row ``i``.  Final responses are byte-identical to
+        :meth:`serve_requests` — fusion prompts come from the same
+        :meth:`_fusion_inputs`, the step body is the batch scan's body,
+        and rows are independent, so co-residency (which rows share a
+        decode step) cannot leak into any row's bytes.
+
+        Rows whose cap exceeds the stream fuser's ``max_new_cap`` (or a
+        server built with ``fast_generate=False``) fall back to the
+        batch-boundary path for the whole micro-batch: ``on_token`` then
+        fires once per row with the final tokens, so streaming consumers
+        degrade to one coarse event rather than an error."""
+        if not requests:
+            return []
+        t_start = time.perf_counter()
+        plan = self._plan_batch(requests, exclude_members, masked_members)
+        max_new = max(plan.max_new_per_row)
+
+        fuser = (self.stream_fuser(capacity, prefill_chunk)
+                 if self.fuser_dispatch is not None else None)
+        if fuser is None or max_new > fuser.max_new_cap:
+            t0 = time.perf_counter()
+            fused = self._fuse(plan.queries, plan.member_out, plan.mask, max_new)
+            t_fuse = time.perf_counter() - t0
+            row_tokens = [fused[i, :plan.max_new_per_row[i]]
+                          for i in range(len(requests))]
+            if on_token is not None:
+                for i, toks in enumerate(row_tokens):
+                    on_token(i, [int(t) for t in toks])
+            return self._settle(plan, row_tokens, t_start, t_fuse)
+
+        t0 = time.perf_counter()
+        fuse_in = self._fusion_inputs(plan.queries, plan.member_out,
+                                      plan.mask, max_new)
+        done_tokens: Dict[int, List[int]] = {}
+        errors: List[BaseException] = []
+        fuser.submit(
+            fuse_in, list(plan.max_new_per_row),
+            on_token=on_token,
+            on_done=lambda i, toks: done_tokens.__setitem__(i, toks),
+            on_error=lambda i, exc: errors.append(exc),
+        )
+        fuser.pump()
+        if errors:
+            raise errors[0]
+        t_fuse = time.perf_counter() - t0
+        row_tokens = [done_tokens[i] for i in range(len(requests))]
+        return self._settle(plan, row_tokens, t_start, t_fuse)
 
     # ------------------------------------------------------------------
     def serve(self, records: List[Record],

@@ -167,6 +167,54 @@ def encdec_generate_with_cache(
     return toks.swapaxes(0, 1), cache
 
 
+def encdec_prefill_with_cache(
+    model: EncDecLM,
+    params: dict,
+    enc_tokens: jax.Array,  # [B, Se]
+    cache: dict,  # model.init_cache(B, max_new + 2, enc_seq=Se)
+    eos_id: int,
+    bos_id: int,
+) -> Tuple[jax.Array, jax.Array, dict]:
+    """Prefill half of the streaming decode loop: encoder forward + BOS
+    decoder step, exactly as :func:`encdec_generate_with_cache` does before
+    its scan.  Returns ``(tok0 [B], done0 [B], cache)`` — the state a row
+    carries into its first :func:`encdec_decode_step`.  Disaggregating this
+    from the step body is what lets a long prompt prefill outside the
+    shared decode loop (it never stalls rows already decoding)."""
+    b = enc_tokens.shape[0]
+    cache = reset_cache(cache)
+    bos = jnp.full((b, 1), bos_id, jnp.int32)
+    logits, cache = model.prefill(params, bos, cache, enc_tokens=enc_tokens)
+    tok0 = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    return tok0, tok0 == eos_id, cache
+
+
+def encdec_decode_step(
+    model: EncDecLM,
+    params: dict,
+    tok: jax.Array,  # [B] carry token per slot
+    pos: jax.Array,  # [B] decode position per slot (1 at the first step)
+    done: jax.Array,  # [B] bool; True for finished AND vacant slots
+    cache: dict,
+    pad_id: int,
+    eos_id: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, dict]:
+    """One decode step over a persistent in-flight batch: the scan body of
+    :func:`encdec_generate_with_cache`, lifted out so rows can join and
+    leave between steps.  ``done`` doubles as the leave/vacancy mask — a
+    finished or empty slot emits ``pad_id`` and feeds ``pad_id`` forward,
+    so its math can never perturb live rows (rows are independent).
+    ``pos`` is per-row, so co-resident rows may be at different depths.
+    Returns ``(emitted, next_tok, pos + 1, done_next, cache)``; a row's
+    emitted sequence is bit-identical to the batch-boundary scan's."""
+    out_tok = jnp.where(done, pad_id, tok)
+    logits, cache = model.decode_step(params, tok[:, None], pos, cache)
+    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    done_next = done | (tok == eos_id)
+    nxt = jnp.where(done_next, pad_id, nxt)
+    return out_tok, nxt, pos + 1, done_next, cache
+
+
 @functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
 def _generate_encdec(
     model: EncDecLM,

@@ -74,9 +74,11 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import threading
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Dict, Iterator, List, Optional, Tuple
 
-from repro.serve.api import EnsembleRequest, EnsembleResponse
+from repro.data.tokenizer import TOKENIZER
+from repro.serve.api import EnsembleRequest, EnsembleResponse, StreamEvent
 from repro.serve.backends import HostFailure, MemberFailure
 from repro.serve.cluster.worker import DispatchWorker, InboxFull
 from repro.serve.dispatch import BucketLadder
@@ -105,7 +107,13 @@ class ResponseFuture:
         self._error: Optional[BaseException] = None
         self._done = False
         self._resolved = threading.Event()
+        # makes resolve-vs-timeout atomic: _set/_fail hold it, so an
+        # expiring wait can re-check before declaring a timeout
+        self._resolve_lock = threading.Lock()
+        self._stream_cv = threading.Condition()
+        self._stream_events: List[StreamEvent] = []
         self.deadline_missed = False  # dispatched after its deadline tick
+        self.ttft_s: Optional[float] = None  # wall s to first streamed token
 
     def done(self) -> bool:
         return self._done
@@ -126,28 +134,83 @@ class ResponseFuture:
         if not self._done:
             self._scheduler._dispatch_for(self)
             if not self._resolved.wait(timeout):
-                # the batch stays in flight on the worker — record the
-                # abandoned wait in the trace (a silent TimeoutError used
-                # to leave no evidence) and keep the future resolvable:
-                # a later result() call returns normally once the batch
-                # lands
-                self._scheduler._note_result_timeout(self, timeout)
-                raise TimeoutError(
-                    f"request {self.seq} not served within {timeout}s")
+                # the wait expired — but the batch may have resolved between
+                # the expiring wait and this line.  Re-check under the lock
+                # _set/_fail hold, so a served request can never surface as
+                # a TimeoutError (or spuriously bump result_timeouts / the
+                # "timeout" trace event).
+                with self._resolve_lock:
+                    if not self._done:
+                        # the batch stays in flight on the worker — record
+                        # the abandoned wait in the trace (a silent
+                        # TimeoutError used to leave no evidence) and keep
+                        # the future resolvable: a later result() call
+                        # returns normally once the batch lands
+                        self._scheduler._note_result_timeout(self, timeout)
+                        raise TimeoutError(
+                            f"request {self.seq} not served within {timeout}s")
         if self._error is not None:
             raise self._error
         assert self._response is not None
         return self._response
 
+    def stream(self, timeout: Optional[float] = None) -> Iterator[StreamEvent]:
+        """Iterate this request's :class:`StreamEvent` increments as its
+        fusion decodes, ending with a ``final=True`` event that carries the
+        settled :class:`EnsembleResponse`.
+
+        Like :meth:`result`, iterating dispatches this future's own batch
+        if it is still queued.  Under a streaming scheduler events arrive
+        one per decode step of this request's row; under a non-streaming
+        scheduler (or the engine's coarse fallback) the iterator degrades
+        to a single pass over whatever was buffered plus the final event.
+        ``timeout`` bounds each wait for the *next* event; a failed or
+        shed request raises from the iterator exactly as ``result()``
+        would."""
+        self._scheduler._dispatch_for(self)
+        i = 0
+        while True:
+            with self._stream_cv:
+                while len(self._stream_events) <= i and not self._done:
+                    if not self._stream_cv.wait(timeout):
+                        raise TimeoutError(
+                            f"request {self.seq}: no stream progress "
+                            f"within {timeout}s")
+                pending = list(self._stream_events[i:])
+                i += len(pending)
+                finished = self._done and len(self._stream_events) == i
+            yield from pending
+            if finished:
+                break
+        response = self.result(timeout)  # raises the batch error / shed
+        with self._stream_cv:
+            last = self._stream_events[-1].tokens if self._stream_events else ()
+        yield StreamEvent(seq=self.seq, tokens=last, text=response.text,
+                          final=True, response=response)
+
+    def _push_stream(self, tokens: List[int]) -> None:
+        ev = StreamEvent(
+            seq=self.seq, tokens=tuple(tokens),
+            text=TOKENIZER.decode_capped(tokens, len(tokens)))
+        with self._stream_cv:
+            self._stream_events.append(ev)
+            self._stream_cv.notify_all()
+
     def _set(self, response: EnsembleResponse) -> None:
-        self._response = response
-        self._done = True
-        self._resolved.set()
+        with self._resolve_lock:
+            self._response = response
+            self._done = True
+            self._resolved.set()
+        with self._stream_cv:
+            self._stream_cv.notify_all()
 
     def _fail(self, error: BaseException) -> None:
-        self._error = error
-        self._done = True
-        self._resolved.set()
+        with self._resolve_lock:
+            self._error = error
+            self._done = True
+            self._resolved.set()
+        with self._stream_cv:
+            self._stream_cv.notify_all()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,7 +291,9 @@ class Scheduler:
                  ladder: Optional[BucketLadder] = None,
                  hedge: bool = True, record_events: bool = True,
                  sync: bool = True, inbox_capacity: int = 64,
-                 allow_degraded: bool = False):
+                 allow_degraded: bool = False, stream: bool = False,
+                 stream_capacity: int = 8,
+                 prefill_chunk: Optional[int] = None):
         if max_batch_size < 1:
             raise ValueError("max_batch_size must be >= 1")
         self.server = server
@@ -244,6 +309,12 @@ class Scheduler:
         self.allow_degraded = allow_degraded
         self.record_events = record_events
         self.sync = sync
+        # token-level continuous batching: batches fuse through the
+        # engine's persistent stream fuser, pushing per-step token events
+        # into each row's ResponseFuture (see enable_streaming)
+        self.stream = stream
+        self.stream_capacity = stream_capacity
+        self.prefill_chunk = prefill_chunk
         self.now = 0
         self._seq = 0
         self.last_submitted: Optional[ResponseFuture] = None
@@ -268,7 +339,21 @@ class Scheduler:
             "shed": 0, "downgraded": 0, "deadline_misses": 0,
             "hedges": 0, "host_hedges": 0, "hedged_requests": 0,
             "padded_rows": 0, "result_timeouts": 0, "degraded_responses": 0,
+            "stream_tokens": 0,
         }
+
+    def enable_streaming(self, capacity: Optional[int] = None,
+                         prefill_chunk: Optional[int] = None) -> None:
+        """Flip this scheduler onto the token-level continuous-batching
+        fusion path (``--stream`` / the ``streaming`` traffic preset).
+        Final responses — and the whole event trace — are byte-identical
+        to the batch-boundary path; only the decode mechanics and the
+        incremental :class:`StreamEvent` feed change."""
+        self.stream = True
+        if capacity is not None:
+            self.stream_capacity = capacity
+        if prefill_chunk is not None:
+            self.prefill_chunk = prefill_chunk
 
     # ------------------------------------------------------------------
     @property
@@ -552,8 +637,16 @@ class Scheduler:
         Snap down to the largest bucket-ladder rung <= available so the
         fast path pads by zero rows — unless that would strand a request
         that must go now (``forced``), in which case take all forced
-        requests and pad up to the enclosing (still pre-compiled) rung."""
-        available = min(available, self.max_batch_size)
+        requests and pad up to the enclosing (still pre-compiled) rung.
+        Never exceeds the ladder's top rung: a count above it (possible
+        when ``max_batch_size`` is configured past the ladder, via either
+        the exact-rung early return — ``batch_bucket`` falls back to the
+        next power of two beyond the top — or ``forced`` itself) would
+        compile a brand-new bucket on every steady-state dispatch.  The
+        clamped remainder dispatches as a follow-on batch (see
+        ``_dispatch_group``) instead."""
+        top = self.ladder.batch[-1]
+        available = min(available, self.max_batch_size, top)
         forced = min(forced, available)
         if available == self.ladder.batch_bucket(available):
             return available  # already exactly on a rung
@@ -601,7 +694,47 @@ class Scheduler:
                 for p in batch:
                     p.future._fail(exc)
                 raise
+        leftover_forced = min(forced, len(group)) - take
+        if leftover_forced > 0:
+            # forced count exceeded the ladder's top rung: the clamp above
+            # kept this batch on a compiled bucket, so the rest of the
+            # must-go requests dispatch as follow-on rung-sized batches
+            return len(batch) + self._dispatch_group(
+                group[take:], forced=leftover_forced)
         return len(batch)
+
+    def _serve(self, reqs: List[EnsembleRequest], batch: List[_Pending],
+               exclude: frozenset, masked: frozenset,
+               t0: float) -> List[EnsembleResponse]:
+        """One engine call for a formed batch — batch-boundary fusion, or
+        token-level streaming through the engine's persistent fuser.  The
+        streaming path pushes every decode-step emission into the owning
+        row's future; member failures (and their hedged retries) happen in
+        member generation, *before* fusion starts streaming, so a stream
+        never emits tokens for an attempt that is later retried — once
+        tokens flow, the member set behind them is final."""
+        if self.stream:
+            return self.server.serve_requests_stream(
+                reqs, on_token=self._stream_push(batch, t0),
+                exclude_members=exclude, masked_members=masked,
+                capacity=self.stream_capacity,
+                prefill_chunk=self.prefill_chunk)
+        if exclude or masked:
+            return self.server.serve_requests(
+                reqs, exclude_members=exclude, masked_members=masked)
+        return self.server.serve_requests(reqs)
+
+    def _stream_push(self, batch: List[_Pending], t0: float):
+        """Row-indexed ``on_token`` fanning the engine's decode-step
+        emissions out to each row's future (plus TTFT capture)."""
+        def on_token(i: int, tokens: List[int]) -> None:
+            fut = batch[i].future
+            if fut.ttft_s is None:
+                fut.ttft_s = time.perf_counter() - t0
+            fut._push_stream(tokens)
+            with self._lock:
+                self.stats["stream_tokens"] += 1
+        return on_token
 
     def _serve_batch(self, job: _BatchJob) -> None:
         """Serve one formed batch: the engine call plus hedged retries.
@@ -634,13 +767,10 @@ class Scheduler:
             for p in batch:
                 p.future._fail(exc)
             raise exc
+        t_serve0 = time.perf_counter()
         while True:
             try:
-                if exclude or masked:
-                    responses = self.server.serve_requests(
-                        reqs, exclude_members=exclude, masked_members=masked)
-                else:
-                    responses = self.server.serve_requests(reqs)
+                responses = self._serve(reqs, batch, exclude, masked, t_serve0)
                 break
             except MemberFailure as mf:
                 if (not (self.hedge or self.allow_degraded)
@@ -695,7 +825,10 @@ class Scheduler:
                 missing=sorted(set().union(
                     *(r.missing_members for r in responses))),
                 realized=float(sum(r.realized_cost for r in responses)),
-                survivor_full=float(sum(r.survivor_cost for r in responses)))
+                survivor_full=float(sum(r.survivor_cost for r in responses)),
+                # the batch that actually settled (the survivor retry) —
+                # hedged attempts that never served report no padding
+                padded=self.ladder.batch_bucket(len(batch)) - len(batch))
         ledger_rows = []
         for p, response in zip(batch, responses):
             missed = (p.deadline_tick is not None and tick > p.deadline_tick)
@@ -723,6 +856,11 @@ class Scheduler:
             self.stats["degraded_responses"] += n_degraded
             self.stats["deadline_misses"] += sum(
                 1 for p in batch if p.future.deadline_missed)
+            # padding is charged once per *served* dispatch, in this
+            # settlement block that runs exactly once per batch — never
+            # inside the retry loop, where a hedged re-serve would charge
+            # the same rows again (per-attempt padding lives in the
+            # engine dispatcher's own stats, where it belongs)
             self.stats["padded_rows"] += (
                 self.ladder.batch_bucket(len(batch)) - len(batch))
             self.stats["dispatched_batches"] += 1

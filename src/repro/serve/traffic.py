@@ -173,6 +173,13 @@ class Scenario:
     host_stragglers: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
     hedge_stragglers: bool = False
     shard_deadline_s: Optional[float] = None
+    # token-level continuous batching: fuse through the engine's
+    # persistent stream fuser, pushing per-decode-step StreamEvents into
+    # every future (final responses and the event trace stay byte-equal
+    # to the batch-boundary path — pinned by the streaming test tier)
+    streaming: bool = False
+    stream_capacity: Optional[int] = None
+    prefill_chunk: Optional[int] = None
 
 
 def build_arrivals(scenario: Scenario,
@@ -345,6 +352,9 @@ class TrafficSimulator:
                     hedge_stragglers=scenario.hedge_stragglers,
                     shard_deadline_s=scenario.shard_deadline_s)
             scheduler.server.backend = backend
+        if scenario.streaming:
+            scheduler.enable_streaming(capacity=scenario.stream_capacity,
+                                       prefill_chunk=scenario.prefill_chunk)
 
     def run(self, max_idle_ticks: int = 1000) -> TrafficReport:
         arrivals = build_arrivals(self.scenario, self.records)
@@ -563,5 +573,16 @@ def preset_scenarios(n_requests: int = 24, seed: int = 0) -> Dict[str, Scenario]
             host_stragglers=((0, (1, 2)),), hedge_stragglers=True,
             probe_interval=3, probe_failures=2,
             probe_faults=((2, (1,)),),
+        ),
+        "streaming": Scenario(
+            name="streaming",
+            arrivals=ArrivalProcess("steady", rate=2.0),
+            n_requests=n_requests, seed=seed, deadline_ticks=4,
+            streaming=True, stream_capacity=8,
+            mix=(
+                (0.7, {}),
+                (0.2, {"max_new_tokens": 12}),
+                (0.1, {"max_new_tokens": 48, "priority": 1}),
+            ),
         ),
     }

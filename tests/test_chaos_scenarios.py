@@ -728,6 +728,9 @@ def test_degraded_partial_ensemble_golden_settlement(stack):
     degraded_evs = [e for e in report.trace if e["event"] == "degraded"]
     assert [(e["tick"], e["reqs"], e["missing"]) for e in degraded_evs] == [
         (3, [4, 5, 6, 7], [1, 7]), (5, [8, 9, 10, 11], [1, 7])]
+    # degraded settlement reports the survivor batch's own padding (full
+    # rungs here), never a hedged attempt's
+    assert [e["padded"] for e in degraded_evs] == [0, 0]
     for ev in degraded_evs:
         assert ev["realized"] == pytest.approx(sum(
             report.responses[i].realized_cost for i in ev["reqs"]))
